@@ -1,0 +1,143 @@
+"""Figure 5 analogue: recovery time per scenario, split by Table-1 category.
+
+Scenarios (as in the paper):
+  baseline            cached full reinitialization (engine+executors+
+                      weights+groups+compile rebuilt)
+  disagg attn         MA-disaggregated, attention rank fails
+  disagg moe+redundant  MoE rank fails, redundant experts cover
+  disagg moe+missing    MoE rank fails, lost experts masked
+  disagg moe+role_switch MoE rank fails, DP rank switched + disk reload
+  colloc fail         MA-collocated device fails (attn+expert paths both)
+
+Absolute seconds are laptop-scale; the *structure* — which categories a
+scenario pays for — is the paper's claim and is what this reproduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.fault_codes import Severity
+from repro.core.revive import CATEGORIES
+from repro.core.weights import RecoveryPolicy
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+
+def _cfg(redundant: int, experts: int = 16, top_k: int = 2):
+    """Bench-scale MoE: big enough that weight I/O is material (the
+    paper's role-switch case is dominated by the 40.6 s weight load)."""
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    return dataclasses.replace(
+        cfg,
+        d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        num_layers=4, vocab_size=8192,
+        moe=dataclasses.replace(cfg.moe, num_experts=experts,
+                                num_redundant_experts=redundant,
+                                expert_d_ff=512,
+                                num_shared_experts=1,
+                                top_k=top_k))
+
+
+def _run(cfg, ec, fault_pid, component, policy_desc) -> Dict:
+    eng = InferenceEngine(cfg, ec)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(list(rng.integers(0, cfg.vocab_size, 8)), 8)
+            for _ in range(4)]
+    eng.injector.schedule(3, fault_pid, severity=Severity.L6,
+                          component=component, mid_step=True)
+    eng.run(max_steps=150)
+    assert eng.reports, "no recovery happened"
+    rep = eng.reports[0]
+    done = sum(r.state.value == "finished" for r in reqs)
+    return {"scenario": policy_desc, "timings": dict(rep.timings),
+            "total_s": rep.total_s, "compile_source": rep.compile_source,
+            "finished": f"{done}/{len(reqs)}",
+            "detail": rep.moe_plan.describe() if rep.moe_plan else "attn"}
+
+
+def run(workdir: Optional[str] = None) -> List[Dict]:
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_recovery_")
+    rows: List[Dict] = []
+
+    def ec(mode, policy=RecoveryPolicy(), sub="x", num_dp=3, num_moe=2):
+        return EngineConfig(mode=mode, num_dp=num_dp, num_moe=num_moe,
+                            max_batch=2, max_seq=64, block_size=8,
+                            num_blocks=64, policy=policy,
+                            workdir=os.path.join(workdir, sub))
+
+    # -- baseline: cached full reinit (Fig. 1 / Fig. 5 leftmost bar) -----
+    cfg = _cfg(redundant=2)
+    eng = InferenceEngine(cfg, ec("disaggregated", sub="base"))
+    t = eng.full_reinit()
+    rows.append({"scenario": "baseline_cached_reinit",
+                 "timings": {k: v for k, v in t.items()
+                             if k != "precompile_failure_scenarios"},
+                 "total_s": sum(v for k, v in t.items()
+                                if k != "precompile_failure_scenarios"),
+                 "compile_source": "cached", "finished": "-",
+                 "detail": "full instance reinit"})
+
+    # -- disaggregated: attention failure --------------------------------
+    rows.append(_run(_cfg(2), ec("disaggregated", sub="attn"),
+                     fault_pid=1, component="attn", policy_desc="disagg_attn"))
+
+    # -- disaggregated: MoE failure, redundant experts -------------------
+    rows.append(_run(_cfg(redundant=16), ec("disaggregated", sub="red"),
+                     fault_pid=3, component="moe",
+                     policy_desc="disagg_moe_redundant"))
+
+    # -- disaggregated: MoE failure, missing experts ----------------------
+    rows.append(_run(
+        _cfg(redundant=0),
+        ec("disaggregated",
+           policy=RecoveryPolicy(allow_role_switch=False,
+                                 min_ep_for_missing=2), sub="miss"),
+        fault_pid=3, component="moe", policy_desc="disagg_moe_missing"))
+
+    # -- disaggregated: MoE failure, role switch (weights from disk) ------
+    rows.append(_run(_cfg(redundant=0),
+                     ec("disaggregated", sub="switch"),
+                     fault_pid=3, component="moe",
+                     policy_desc="disagg_moe_role_switch"))
+
+    # -- collocated failure ------------------------------------------------
+    rows.append(_run(_cfg(redundant=16),
+                     ec("collocated",
+                        policy=RecoveryPolicy(allow_role_switch=False),
+                        sub="col", num_dp=2),
+                     fault_pid=1, component="attn+moe",
+                     policy_desc="colloc_fail"))
+    return rows
+
+
+def print_table(rows: List[Dict]) -> None:
+    cats = [c for c in CATEGORIES]
+    print("\n# Figure-5 analogue: recovery time by category (seconds)")
+    header = f"{'scenario':28s}" + "".join(f"{c[:10]:>11s}" for c in cats) \
+        + f"{'TOTAL':>9s}  source"
+    print(header)
+    base_total = None
+    for r in rows:
+        t = r["timings"]
+        line = f"{r['scenario']:28s}" + "".join(
+            f"{t.get(c, 0.0):11.3f}" for c in cats)
+        line += f"{r['total_s']:9.3f}  {r['compile_source']}"
+        print(line)
+        if r["scenario"] == "baseline_cached_reinit":
+            base_total = r["total_s"]
+    if base_total:
+        print("\n# reduction vs baseline (paper: 87.8% best case, "
+              "36.6% worst/role-switch):")
+        for r in rows[1:]:
+            red = 100 * (1 - r["total_s"] / base_total)
+            print(f"  {r['scenario']:28s} {red:6.1f}%   ({r['detail']})")
+
+
+if __name__ == "__main__":
+    print_table(run())

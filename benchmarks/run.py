@@ -1,0 +1,102 @@
+"""Benchmark entrypoint: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints human tables plus a machine-readable ``name,us_per_call,derived``
+CSV summary at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the lost-experts training run")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "recovery", "lost_experts",
+                             "compile_cache", "reinit", "roofline",
+                             "slo"])
+    args = ap.parse_args(argv)
+    csv_rows = [("name", "us_per_call", "derived")]
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("reinit"):
+        from benchmarks import reinit_breakdown
+        rows = reinit_breakdown.run()
+        reinit_breakdown.print_table(rows)
+        total = next(r["seconds"] for r in rows if r["category"] == "TOTAL")
+        gen = next(r["share"] for r in rows if r["category"] == "generator")
+        csv_rows.append(("reinit_breakdown", f"{total * 1e6:.0f}",
+                         f"generator_share={gen:.2f}"))
+
+    if want("recovery"):
+        from benchmarks import recovery_time
+        rows = recovery_time.run()
+        recovery_time.print_table(rows)
+        base = next(r for r in rows
+                    if r["scenario"] == "baseline_cached_reinit")
+        others = [r for r in rows if r is not base]
+        best = min(others, key=lambda r: r["total_s"])
+        worst = max(others, key=lambda r: r["total_s"])
+        csv_rows.append(("recovery_best_case",
+                         f"{best['total_s'] * 1e6:.0f}",
+                         f"reduction_vs_baseline="
+                         f"{100 * (1 - best['total_s'] / base['total_s']):.1f}%"))
+        csv_rows.append(("recovery_worst_case",
+                         f"{worst['total_s'] * 1e6:.0f}",
+                         f"reduction_vs_baseline="
+                         f"{100 * (1 - worst['total_s'] / base['total_s']):.1f}%"))
+
+    if want("compile_cache"):
+        from benchmarks import compile_cache
+        rows = compile_cache.run()
+        compile_cache.print_table(rows)
+        cold = rows[0]["read_cache_s"] + rows[0]["compile_s"]
+        pre = rows[2]["read_cache_s"] + rows[2]["compile_s"]
+        csv_rows.append(("compile_cold", f"{cold * 1e6:.0f}", ""))
+        csv_rows.append(("compile_precompiled", f"{pre * 1e6:.0f}",
+                         f"speedup={cold / max(pre, 1e-9):.0f}x"))
+
+    if want("lost_experts"):
+        from benchmarks import lost_experts
+        rows = lost_experts.run(train_steps=150 if args.quick else 400)
+        lost_experts.print_table(rows)
+        base = rows[0]
+        r32 = next((r for r in rows if r["scheme"] == "every_nth"
+                    and abs(r["fraction"] - 1 / 32) < 1e-9), None)
+        if r32:
+            csv_rows.append(("lost_experts_r32_dCE", "0",
+                             f"delta_ce={r32['ce'] - base['ce']:+.4f}"))
+
+    if want("slo"):
+        from benchmarks import slo_timeline
+        res = slo_timeline.run()
+        slo_timeline.print_table(res)
+        csv_rows.append(("slo_worst_stall", f"{res['stall_s'] * 1e6:.0f}",
+                         f"recovery_total_ms="
+                         f"{res['recovery_total_s'] * 1e3:.0f}"))
+
+    if want("roofline"):
+        from benchmarks import roofline
+        rows = roofline.run()
+        if rows:
+            roofline.print_table(rows)
+            csv_rows.append(("roofline_combos", "0", f"n={len(rows)}"))
+        else:
+            print("\n(no dry-run records yet: run "
+                  "`python -m repro.launch.dryrun_all` first)")
+
+    print("\n# CSV summary")
+    for row in csv_rows:
+        print(",".join(str(x) for x in row))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""End-to-end driver — the paper's scenario, live:
+
+Serve a batched request stream on an MA-disaggregated FlowServe instance,
+kill an MoE NPU mid-step, watch ReviveMoE recover without a restart
+(role switch with weights from disk), then kill an attention NPU and
+watch sequences migrate with partial recomputation.  Every request still
+completes.
+
+  PYTHONPATH=src python examples/failover_serving.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.fault_codes import ErrorType, Severity
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+
+def main():
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_redundant_experts=2))
+    ec = EngineConfig(mode="disaggregated", num_dp=3, num_moe=2,
+                      max_batch=2, max_seq=96, block_size=8,
+                      num_blocks=128, workdir="/tmp/repro_failover")
+    eng = InferenceEngine(cfg, ec)
+    print(f"deployment: {ec.num_dp} DPExecutors + {ec.num_moe} MoEExecutors"
+          f" (EP{eng.ep_size}), precompiled failure graphs ready")
+
+    rng = np.random.default_rng(7)
+    reqs = [eng.submit(list(rng.integers(0, cfg.vocab_size, 10)),
+                       max_new_tokens=20) for _ in range(8)]
+
+    # ① MoE NPU dies mid-step at step 5 (its experts are partially
+    #    unreplicated -> Fig.4 routes to a role switch)
+    eng.injector.schedule(5, ec.num_dp + 0, severity=Severity.L6,
+                          error_type=ErrorType.HBM_ECC, component="moe",
+                          mid_step=True)
+    # ② an attention NPU hangs at step 12 -> heartbeat timeout path
+    eng.injector.schedule(12, 0, severity=Severity.L5,
+                          error_type=ErrorType.DRIVER_HANG,
+                          component="attn", mid_step=True)
+
+    eng.run(max_steps=300)
+
+    print(f"\n{len(eng.reports)} recoveries:")
+    for rep in eng.reports:
+        print(" ", rep.summary())
+        for a in rep.actions:
+            print("    -", a)
+    done = sum(r.state.value == "finished" for r in reqs)
+    migrated = sum(r.migrations for r in reqs)
+    print(f"\nfinished {done}/{len(reqs)} requests "
+          f"({migrated} migrations, "
+          f"{sum(r.recomputed_tokens for r in reqs)} tokens re-prefilled)")
+    assert done == len(reqs)
+    print("OK — service survived two hardware failures without a restart")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own.
+
+``get_config(name)`` returns the full-size config; ``get_smoke_config``
+returns the reduced same-family variant used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    LONG_CONTEXT_WINDOW,
+    InputShape,
+    MLAConfig,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+    reduced,
+)
+
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon
+from repro.configs.mistral_large_123b import CONFIG as _mistral
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.internvl2_26b import CONFIG as _internvl
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen_moe
+from repro.configs.internlm2_20b import CONFIG as _internlm
+from repro.configs.deepseek_v3 import CONFIG as _deepseek
+
+ASSIGNED_ARCHS = (
+    "minicpm3-4b",
+    "kimi-k2-1t-a32b",
+    "jamba-1.5-large-398b",
+    "falcon-mamba-7b",
+    "mistral-large-123b",
+    "seamless-m4t-large-v2",
+    "internvl2-26b",
+    "nemotron-4-340b",
+    "qwen2-moe-a2.7b",
+    "internlm2-20b",
+)
+
+_REGISTRY = {
+    c.name: c
+    for c in (
+        _minicpm3, _kimi, _jamba, _falcon, _mistral, _seamless,
+        _internvl, _nemotron, _qwen_moe, _internlm, _deepseek,
+    )
+}
+
+ALL_ARCHS = tuple(_REGISTRY)
+
+
+def get_config(name: str, shape: str | None = None) -> ModelConfig:
+    """Return the registered config, adapted to an input shape if given.
+
+    For ``long_500k`` on full-attention architectures, a sliding-window
+    variant (window=LONG_CONTEXT_WINDOW) is selected so decode stays
+    sub-quadratic (DESIGN.md §5).  Sub-quadratic families (ssm/hybrid) are
+    returned unchanged.
+    """
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]
+    cfg.validate()
+    if shape == "long_500k" and not cfg.supports_long_context_natively:
+        cfg = cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    if shape == "long_500k" and cfg.hybrid_period:
+        # Hybrid: Mamba handles length natively; the sparse attention
+        # sublayers use a windowed KV so their ring cache stays bounded.
+        cfg = cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return reduced(get_config(name))
+
+
+__all__ = [
+    "ALL_ARCHS",
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "LONG_CONTEXT_WINDOW",
+    "InputShape",
+    "MLAConfig",
+    "MambaConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "get_config",
+    "get_smoke_config",
+    "reduced",
+]

@@ -1,0 +1,164 @@
+"""Log-based block-table recovery (§3.3).
+
+During a generation step every block operation (allocate / append /
+ref / unref / free) is appended to a per-step undo log, ARIES-style.  On a
+mid-step failure the log is rolled back in reverse, returning the block
+manager + block tables to the exact state at the step boundary.  At the
+start of each step the previous log is discarded (the step committed).
+
+The log records *inverse information* (prev ref counts, table positions)
+so undo is exact even for idempotence-breaking sequences.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class BlockOp:
+    kind: str                 # 'alloc' | 'free' | 'append' | 'ref' | 'unref'
+    block_id: int
+    seq_id: Optional[int] = None
+    prev_ref: int = 0         # ref count before the op (for free/ref/unref)
+
+
+class BlockLog:
+    """Per-executor undo log, cleared at each generation-step boundary."""
+
+    def __init__(self):
+        self._ops: List[BlockOp] = []
+        self.steps_committed = 0
+
+    def begin_step(self) -> None:
+        """Previous step fully completed -> its log is no longer needed."""
+        self._ops.clear()
+        self.steps_committed += 1
+
+    def record(self, op: BlockOp) -> None:
+        self._ops.append(op)
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def undo_all(self, manager: "BlockManager",
+                 tables: Dict[int, "BlockTable"]) -> int:
+        """Roll back every op of the in-flight step, in reverse order.
+
+        Returns the number of ops undone."""
+        n = len(self._ops)
+        for op in reversed(self._ops):
+            if op.kind == "alloc":
+                # undoing an allocation decrements the ref count / deletes
+                manager._undo_alloc(op.block_id)
+            elif op.kind == "free":
+                manager._undo_free(op.block_id, op.prev_ref)
+            elif op.kind == "append":
+                tables[op.seq_id]._undo_append(op.block_id)
+            elif op.kind == "ref":
+                manager._set_ref(op.block_id, op.prev_ref)
+            elif op.kind == "unref":
+                manager._set_ref(op.block_id, op.prev_ref)
+            else:  # pragma: no cover
+                raise ValueError(op.kind)
+        self._ops.clear()
+        return n
+
+
+class BlockTable:
+    """Per-sequence ordered list of physical block ids (host metadata)."""
+
+    def __init__(self, seq_id: int):
+        self.seq_id = seq_id
+        self.blocks: List[int] = []
+
+    def append_block(self, block_id: int, log: Optional[BlockLog] = None):
+        self.blocks.append(block_id)
+        if log is not None:
+            log.record(BlockOp("append", block_id, self.seq_id))
+
+    def _undo_append(self, block_id: int):
+        assert self.blocks and self.blocks[-1] == block_id, \
+            f"undo mismatch: table tail {self.blocks[-1:]} vs {block_id}"
+        self.blocks.pop()
+
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+
+class BlockManager:
+    """Free-list block allocator with ref counts (prefix sharing ready)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+
+    # -- public ops (logged) -------------------------------------------------
+
+    def allocate(self, log: Optional[BlockLog] = None) -> int:
+        if not self._free:
+            raise RuntimeError("out of KV blocks")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        if log is not None:
+            log.record(BlockOp("alloc", bid))
+        return bid
+
+    def free(self, block_id: int, log: Optional[BlockLog] = None) -> None:
+        prev = self._ref.get(block_id, 0)
+        assert prev > 0, f"double free of block {block_id}"
+        if log is not None:
+            log.record(BlockOp("free", block_id, prev_ref=prev))
+        if prev == 1:
+            del self._ref[block_id]
+            self._free.append(block_id)
+        else:
+            self._ref[block_id] = prev - 1
+
+    def add_ref(self, block_id: int, log: Optional[BlockLog] = None) -> None:
+        prev = self._ref.get(block_id, 0)
+        assert prev > 0
+        if log is not None:
+            log.record(BlockOp("ref", block_id, prev_ref=prev))
+        self._ref[block_id] = prev + 1
+
+    # -- undo internals (called by BlockLog only) ------------------------------
+
+    def _undo_alloc(self, block_id: int) -> None:
+        ref = self._ref.get(block_id, 0)
+        assert ref >= 1, f"undo alloc of unallocated block {block_id}"
+        if ref == 1:
+            del self._ref[block_id]
+            self._free.append(block_id)
+        else:
+            self._ref[block_id] = ref - 1
+
+    def _undo_free(self, block_id: int, prev_ref: int) -> None:
+        if block_id in self._ref:
+            self._ref[block_id] = prev_ref
+        else:
+            self._free.remove(block_id)
+            self._ref[block_id] = prev_ref
+
+    def _set_ref(self, block_id: int, ref: int) -> None:
+        self._ref[block_id] = ref
+
+    # -- introspection ---------------------------------------------------------
+
+    def ref_count(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._ref)
+
+    def snapshot(self):
+        """Hashable state snapshot (for property tests)."""
+        return (tuple(sorted(self._free)),
+                tuple(sorted(self._ref.items())))

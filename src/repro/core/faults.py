@@ -1,0 +1,74 @@
+"""Deterministic fault injection.
+
+The injector plays the role of the physical failure: it schedules faults
+at (engine step, device) granularity.  ``mid_step`` faults fire *inside*
+an executor's generation step — after block-table mutations have been
+logged but before the step commits — exercising the §3.3 undo path.
+Fired faults surface as node annotations (the Kubernetes device-plugin
+analogue) that the detection layer polls.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.fault_codes import ErrorType, FaultEvent, Severity
+
+
+@dataclass
+class ScheduledFault:
+    at_step: int
+    physical_id: int
+    severity: Severity = Severity.L6
+    error_type: ErrorType = ErrorType.HBM_ECC
+    component: str = "attn"           # what the device was doing
+    mid_step: bool = False            # fire inside the generation step
+    fired: bool = False
+
+
+class SimulatedDeviceFailure(Exception):
+    def __init__(self, event: FaultEvent):
+        super().__init__(str(event))
+        self.event = event
+
+
+class FaultInjector:
+    def __init__(self):
+        self.scheduled: List[ScheduledFault] = []
+        self.annotations: List[FaultEvent] = []   # "node annotations"
+
+    def schedule(self, at_step: int, physical_id: int, *,
+                 severity: Severity = Severity.L6,
+                 error_type: ErrorType = ErrorType.HBM_ECC,
+                 component: str = "attn", mid_step: bool = False) -> None:
+        self.scheduled.append(ScheduledFault(
+            at_step, physical_id, severity, error_type, component, mid_step))
+
+    def pre_step_faults(self, step: int) -> List[FaultEvent]:
+        """Faults firing at a step boundary: annotate and return them."""
+        out = []
+        for f in self.scheduled:
+            if not f.fired and not f.mid_step and f.at_step == step:
+                f.fired = True
+                ev = FaultEvent(rank=f.physical_id, severity=f.severity,
+                                error_type=f.error_type,
+                                component=f.component)
+                self.annotations.append(ev)
+                out.append(ev)
+        return out
+
+    def maybe_fail_mid_step(self, step: int, physical_id: int) -> None:
+        """Called from inside an executor's step; raises on a hit."""
+        for f in self.scheduled:
+            if (not f.fired and f.mid_step and f.at_step == step
+                    and f.physical_id == physical_id):
+                f.fired = True
+                ev = FaultEvent(rank=physical_id, severity=f.severity,
+                                error_type=f.error_type,
+                                component=f.component)
+                self.annotations.append(ev)
+                raise SimulatedDeviceFailure(ev)
+
+    def drain_annotations(self) -> List[FaultEvent]:
+        out, self.annotations = self.annotations, []
+        return out

@@ -1,0 +1,42 @@
+"""Sequence state recovery (§3.2): migration + partial recomputation.
+
+The KV cache of a failed attention rank is gone, but every sequence's
+prompt and decoded token ids still live in host memory.  Migration
+requeues each sequence on a healthy rank; its next prefill consumes
+``prompt + decoded`` (the concatenated new prompt), so completed decode
+steps are never redone — only the KV prefill is recomputed.
+
+Recovery is step-level: the in-flight generation step on *every* executor
+is rolled back (block log §3.3) and its sampled tokens discarded, because
+layer-level checkpoints could leave inconsistent KV across layers.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence
+
+from repro.serving.request import Request, RequestState
+
+
+def plan_migration(reqs: Sequence[Request], target_loads: dict
+                   ) -> List[tuple]:
+    """Assign each request to the least-loaded healthy executor.
+
+    target_loads: {dp_rank: current_num_requests} for healthy ranks.
+    Returns [(req, dp_rank)] and updates loads greedily.
+    """
+    assert target_loads, "no healthy attention ranks to migrate to"
+    loads = dict(target_loads)
+    out = []
+    # longest sequences first: balances the re-prefill work
+    for req in sorted(reqs, key=lambda r: -r.num_tokens):
+        rank = min(loads, key=lambda k: loads[k])
+        loads[rank] += 1
+        out.append((req, rank))
+    return out
+
+
+def prepare_for_migration(req: Request) -> Request:
+    """Partial-recomputation accounting; the request keeps its identity."""
+    req.rebuild_prompt_for_migration()
+    req.recomputed_tokens += req.num_tokens   # KV to re-prefill
+    return req

@@ -1,0 +1,259 @@
+"""Distributed MoE application — the XCCL dispatch/combine analogue.
+
+``MoEDist`` (default, ``gather_psum``): 2D-sharded experts —
+expert *slots* over 'model' (EP), each expert's FFN dim over 'data'
+(expert-TP) — so trillion-parameter expert banks fit 256 chips
+(e.g. Kimi K2: 2.2 TB of experts → 8.6 GB/chip).  Tokens arrive sharded
+over DP; dispatch = chunked all-gather over 'data' (the microbatching the
+paper uses to overlap attention and MoE, §2.2), combine = psum over
+'model' (expert-slot partials) + psum_scatter over 'data' (FFN-dim
+partials + return to DP sharding).  The 'pod' axis stays pure DP: each
+pod is an independent EP group, exactly the paper's
+one-instance-per-pod deployment.
+
+``MoEDistA2A``: explicit all-to-all dispatch/combine (A2E/E2A analogue,
+MegaScale-style) — tokens travel to expert owners instead of being
+replicated.  Collective volume per layer is O(T·k·D/ep · 2) vs
+O(T·D·(1 + 1/dp)) for gather_psum; the §Perf pass quantifies both.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import (MoERuntime, dispatch_compute_combine,
+                              experts_compute, physical_experts, route,
+                              select_replicas)
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # newer jax
+    from jax import shard_map
+
+# max tokens materialized per all-gathered dispatch chunk (bounds the
+# transient activation: 64k × 8192 × bf16 ≈ 1 GiB)
+MAX_GATHERED_TOKENS = 65536
+
+
+class MoEDist:
+    """gather_psum with 2D expert sharding (slots × FFN-dim)."""
+
+    name = "gather_psum"
+
+    def __init__(self, mesh, dp_axes: Tuple[str, ...] = ("data",),
+                 ep_axis: str = "model", tp_axis: str = "data"):
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        self.ep_axis = ep_axis
+        self.tp_axis = tp_axis
+        self.dp_size = math.prod(
+            mesh.shape[a] for a in dp_axes) if dp_axes else 1
+        self.ep_size = mesh.shape[ep_axis]
+        self.tp_size = mesh.shape[tp_axis]
+        self.pod_size = mesh.shape.get("pod", 1)
+
+    # tokens processed together in one EP group (= one pod)
+    def group_tokens(self, global_tokens: int) -> int:
+        return max(1, global_tokens // self.pod_size)
+
+    def cap_for(self, global_tokens: int, moe) -> int:
+        """Per-expert capacity for one dispatch chunk."""
+        from repro.models.moe import capacity
+        T_group = self.group_tokens(global_tokens)
+        n_chunks = max(1, -(-T_group // MAX_GATHERED_TOKENS))
+        chunk = max(1, T_group // n_chunks)
+        return capacity(chunk * moe.top_k, physical_experts(moe),
+                        moe.capacity_factor, floor=moe.min_capacity)
+
+    def expert_specs(self):
+        """PartitionSpecs for stacked expert leaves (L, E, D, F)/(L, E, F, D)."""
+        return {
+            "gate": P(None, self.ep_axis, None, self.tp_axis),
+            "up": P(None, self.ep_axis, None, self.tp_axis),
+            "down": P(None, self.ep_axis, self.tp_axis, None),
+        }
+
+    def apply(self, p, cfg: ModelConfig, x_flat, runtime: MoERuntime,
+              cap: int):
+        moe = cfg.moe
+        e_phys = physical_experts(moe)
+        assert e_phys % self.ep_size == 0, (e_phys, self.ep_size)
+        e_local = e_phys // self.ep_size
+        ep_axis, tp_axis, dp = self.ep_axis, self.tp_axis, self.dp_axes
+        T_global = x_flat.shape[0]
+        # tiny batches (long_500k decode: B=1) cannot shard over DP;
+        # tokens stay replicated and the gather/scatter legs drop out
+        replicated = T_global % self.dp_size != 0
+        T_group = self.group_tokens(T_global)
+        n_chunks = (1 if replicated
+                    else max(1, -(-T_group // MAX_GATHERED_TOKENS)))
+        mesh = self.mesh
+
+        def inner(router_w, gate_w, up_w, down_w, x_loc, rt):
+            T_loc, D = x_loc.shape
+            assert T_loc % n_chunks == 0, (T_loc, n_chunks)
+            offset = jax.lax.axis_index(ep_axis) * e_local
+            xc = x_loc.reshape(n_chunks, T_loc // n_chunks, D)
+
+            def one_chunk(carry, x_chunk):
+                # dispatch: replicate this chunk's tokens across the EP
+                # group (chunked all-gather = microbatched A2E)
+                if replicated:
+                    xg = x_chunk
+                else:
+                    xg = jax.lax.all_gather(x_chunk, tp_axis, axis=0,
+                                            tiled=True)
+                weights, sel, aux = route(router_w, xg, rt, moe)
+                phys, alive = select_replicas(sel, rt)
+                y = dispatch_compute_combine(
+                    xg, weights, phys, alive, gate_w, up_w, down_w,
+                    cap=cap, expert_offset=offset, e_local=e_local)
+                # combine: expert-slot partials over EP, FFN-dim partials
+                # over expert-TP (+ scatter back to the DP layout) = E2A
+                y = jax.lax.psum(y, ep_axis)
+                if replicated:
+                    y = jax.lax.psum(y, tp_axis)
+                else:
+                    y = jax.lax.psum_scatter(y, tp_axis,
+                                             scatter_dimension=0, tiled=True)
+                return carry + aux, y
+
+            aux, ys = jax.lax.scan(one_chunk, 0.0, xc)
+            y = ys.reshape(T_loc, D)
+            axes = tuple(dp) + (ep_axis,)
+            aux = jax.lax.psum(aux, axes) / (
+                math.prod(mesh.shape[a] for a in axes) * n_chunks)
+            return y, aux
+
+        tok_spec = P(None, None) if replicated else P(dp, None)
+        espec = self.expert_specs()
+        fn = shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(None, None),                   # router (replicated)
+                      P(*espec["gate"][1:]), P(*espec["up"][1:]),
+                      P(*espec["down"][1:]),
+                      tok_spec,
+                      MoERuntime(P(None, None), P(None), P(None))),
+            out_specs=(tok_spec, P()),
+            check_rep=False,
+        )
+        return fn(p["router"], p["gate"], p["up"], p["down"], x_flat,
+                  runtime)
+
+
+class MoEDistA2A(MoEDist):
+    """Explicit all-to-all dispatch/combine (A2E/E2A analogue).
+
+    Tokens enter sharded over (dp..., ep); each rank sends its tokens' k
+    copies to the owning EP rank and receives outputs back.  Expert
+    weights keep the same 2D sharding, so the FFN-dim partials still
+    psum over the tp axis — but the token payload on the wire is only
+    the routed copies, not a full replication.
+    """
+
+    name = "a2a"
+
+    def cap_for(self, global_tokens: int, moe) -> int:
+        """Per-(src,dst) send capacity: expected T_loc·k/ep, padded."""
+        from repro.models.moe import capacity
+        T_loc = max(1, global_tokens // (self.dp_size * self.ep_size))
+        return capacity(T_loc * moe.top_k, self.ep_size,
+                        moe.capacity_factor, floor=moe.min_capacity)
+
+    def apply(self, p, cfg: ModelConfig, x_flat, runtime: MoERuntime,
+              cap: int):
+        moe = cfg.moe
+        e_phys = physical_experts(moe)
+        e_local = e_phys // self.ep_size
+        ep_axis, tp_axis, dp = self.ep_axis, self.tp_axis, self.dp_axes
+        ep = self.ep_size
+        token_axes = tuple(dp) + (ep_axis,)
+        mesh = self.mesh
+
+        def inner(router_w, gate_w, up_w, down_w, x_loc, rt):
+            T, D = x_loc.shape
+            k = moe.top_k
+            my_rank = jax.lax.axis_index(ep_axis)
+            weights, sel, aux = route(router_w, x_loc, rt, moe)
+            phys, alive = select_replicas(sel, rt)            # (T, k)
+            dest = phys // e_local                            # owner rank
+            N = T * k
+            flat_dest = jnp.where(alive.reshape(N), dest.reshape(N), ep)
+            order = jnp.argsort(flat_dest, stable=True)
+            sorted_dest = flat_dest[order]
+            first = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+            pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
+            keep = (sorted_dest < ep) & (pos < cap)
+            s_dest = jnp.where(keep, sorted_dest, ep)
+            s_pos = jnp.where(keep, pos, cap)
+            tok = jnp.arange(N, dtype=jnp.int32) // k
+
+            send = jnp.zeros((ep, cap, D), x_loc.dtype)
+            send = send.at[s_dest, s_pos].set(x_loc[tok[order]],
+                                              mode="drop")
+            send_e = jnp.full((ep, cap), e_phys, jnp.int32).at[
+                s_dest, s_pos].set(phys.reshape(N)[order], mode="drop")
+
+            # A2E: token copies travel to their expert's owner rank
+            recv = jax.lax.all_to_all(send, ep_axis, 0, 0, tiled=False)
+            recv_e = jax.lax.all_to_all(send_e, ep_axis, 0, 0, tiled=False)
+            rt_tokens = recv.reshape(ep * cap, D)
+            rt_e = recv_e.reshape(ep * cap) - my_rank * e_local
+            rt_ok = (rt_e >= 0) & (rt_e < e_local)
+
+            order2 = jnp.argsort(jnp.where(rt_ok, rt_e, e_local),
+                                 stable=True)
+            se = jnp.where(rt_ok, rt_e, e_local)[order2]
+            first2 = jnp.searchsorted(se, se, side="left")
+            pos2 = jnp.arange(ep * cap, dtype=jnp.int32) - first2.astype(
+                jnp.int32)
+            cap2 = min(ep * cap, max(8, int(
+                moe.capacity_factor * ep * cap / max(e_local, 1))))
+            keep2 = (se < e_local) & (pos2 < cap2)
+            d_e = jnp.where(keep2, se, e_local)
+            d_p = jnp.where(keep2, pos2, cap2)
+            buf = jnp.zeros((e_local, cap2, D), x_loc.dtype)
+            buf = buf.at[d_e, d_p].set(rt_tokens[order2], mode="drop")
+            out_buf = experts_compute(gate_w, up_w, down_w, buf)
+            # FFN-dim partials combine over the expert-TP axis
+            out_buf = jax.lax.psum(out_buf, tp_axis)
+            y_sorted = out_buf.at[d_e, d_p].get(mode="fill", fill_value=0.0)
+            y_recv = jnp.zeros((ep * cap, D), x_loc.dtype).at[order2].set(
+                y_sorted)
+
+            # E2A: expert outputs travel home
+            back = jax.lax.all_to_all(y_recv.reshape(ep, cap, D),
+                                      ep_axis, 0, 0, tiled=False)
+            y_flat_sorted = back.at[s_dest, s_pos].get(
+                mode="fill", fill_value=0.0)                   # (N, D)
+            y_flat = jnp.zeros((N, D), x_loc.dtype).at[order].set(
+                y_flat_sorted)
+            y = (y_flat.reshape(T, k, D) *
+                 weights[..., None].astype(x_loc.dtype)).sum(axis=1)
+            aux = jax.lax.psum(aux, token_axes) / math.prod(
+                mesh.shape[a] for a in token_axes)
+            return y, aux
+
+        espec = self.expert_specs()
+        fn = shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(None, None),
+                      P(*espec["gate"][1:]), P(*espec["up"][1:]),
+                      P(*espec["down"][1:]),
+                      P(token_axes, None),
+                      MoERuntime(P(None, None), P(None), P(None))),
+            out_specs=(P(token_axes, None), P()),
+            check_rep=False,
+        )
+        return fn(p["router"], p["gate"], p["up"], p["down"], x_flat,
+                  runtime)
+
+
+def make_moe_dist(mesh, impl: str, dp_axes=("data",), ep_axis="model"):
+    cls = {"gather_psum": MoEDist, "a2a": MoEDistA2A}[impl]
+    return cls(mesh, dp_axes, ep_axis)

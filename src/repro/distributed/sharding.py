@@ -1,0 +1,248 @@
+"""Sharding rules: param/cache/batch PartitionSpecs per architecture.
+
+Baseline policy (DESIGN.md §6):
+* batch over the DP axes (("pod",)+"data" when multi-pod),
+* routed experts over 'model' (EP) — the paper's deployment style,
+* dense FFN / mamba channels over 'model' (Megatron TP),
+* attention: paper-faithful TP=1 (replicated over 'model') for MoE
+  families; head-sharded TP for the big dense models where head counts
+  divide (they do not fit a chip replicated),
+* vocab (embed/lm_head) over 'model' (padded to a multiple of 2048),
+* decode caches: batch over DP when divisible (long_500k B=1 replicates).
+
+Every rule degrades to replication when a dimension does not divide the
+axis — correctness first, the §Perf pass tunes the exceptions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _keys(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+class ShardingRules:
+    def __init__(self, mesh, cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.model_size = mesh.shape["model"]
+        self.dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        self.dp_size = 1
+        for a in self.dp:
+            self.dp_size *= mesh.shape[a]
+        # attention TP only where heads divide the model axis; MoE
+        # families keep the paper's attention-DP/TP=1 layout unless heads
+        # divide (costless to shard the projections when they do).
+        self.attn_tp = (cfg.num_heads > 0 and
+                        cfg.num_heads % self.model_size == 0)
+        self.kv_tp = (cfg.num_kv_heads > 0 and
+                      cfg.num_kv_heads % self.model_size == 0)
+        self.data_size = mesh.shape.get("data", 1)
+        # FSDP-style 2D weight sharding for dense models too large for
+        # 16-way TP alone (e.g. nemotron-340B: 680 GB bf16 -> 42 GB/chip
+        # at TP16; 2D over (data, model) -> 2.7 GB/chip).  GSPMD streams
+        # the per-layer all-gather inside the layer scan.
+        dense_bytes = self._non_expert_param_bytes()
+        self.fsdp = dense_bytes / self.model_size > 12e9
+
+    def _non_expert_param_bytes(self) -> float:
+        cfg = self.cfg
+        D = cfg.d_model
+        per_layer = 0.0
+        if cfg.num_heads:
+            Dh = cfg.resolved_head_dim()
+            per_layer += D * (cfg.num_heads + 2 * cfg.num_kv_heads) * Dh \
+                + cfg.num_heads * Dh * D
+        if cfg.moe is None and cfg.d_ff:
+            per_layer += 3 * D * cfg.d_ff
+        if cfg.mamba is not None:
+            di = cfg.mamba.expand * D
+            per_layer += 2 * D * di * 2
+        n = cfg.num_layers + cfg.encoder_layers
+        return (per_layer * n + 2 * cfg.vocab_size * D) * 2.0  # bf16
+
+    # -- params ------------------------------------------------------------------
+
+    def _div(self, dim: int) -> bool:
+        return dim % self.model_size == 0
+
+    def param_spec(self, path, leaf) -> P:
+        keys = _keys(path)
+        name = keys[-1]
+        shape = leaf.shape
+        nd = len(shape)
+
+        wide = ("data", "model")
+        wide_size = self.data_size * self.model_size
+
+        def col():  # shard last dim
+            if self.fsdp and shape[-1] % wide_size == 0:
+                return P(*([None] * (nd - 1) + [wide]))
+            if self._div(shape[-1]):
+                return P(*([None] * (nd - 1) + ["model"]))
+            return P()
+
+        def row(axis_from_end=2):  # shard dim -2
+            sp = [None] * nd
+            if self.fsdp and shape[-axis_from_end] % wide_size == 0:
+                sp[nd - axis_from_end] = wide
+                return P(*sp)
+            if self._div(shape[-axis_from_end]):
+                sp[nd - axis_from_end] = "model"
+                return P(*sp)
+            return P()
+
+        if name == "embed":
+            if self.fsdp and shape[-1] % self.data_size == 0:
+                return P("model", "data")
+            return P("model", None)
+        if name == "lm_head":
+            if self.fsdp and shape[0] % self.data_size == 0:
+                return P("data", "model")
+            return P(None, "model")
+        if "moe" in keys and name in ("gate", "up", "down"):
+            # (L, E_phys, D, F): 2D — expert slots over 'model' (EP),
+            # FFN dim over 'data' (expert-TP); matches MoEDist.expert_specs
+            sp = [None] * nd
+            sp[nd - 3] = "model"
+            tp_dim = (nd - 1) if name in ("gate", "up") else (nd - 2)
+            if shape[tp_dim] % self.data_size == 0:
+                sp[tp_dim] = "data"
+            return P(*sp)
+        if name == "router":
+            return P()
+        # attention projections
+        if name in ("wq",):
+            return col() if (self.attn_tp or self.fsdp) else P()
+        if name in ("wk", "wv"):
+            # under FSDP the flat projection dim shards 2D regardless of
+            # head boundaries (GSPMD reshards at the reshape); otherwise
+            # kv-head TP only when heads divide
+            return col() if (self.kv_tp or self.fsdp) else P()
+        if name == "wo":
+            return row() if (self.attn_tp or self.fsdp) else P()
+        # MLA
+        if name in ("wdq", "wuq"):
+            return col() if self.attn_tp else P()
+        if name in ("wuk", "wuv"):
+            # (..., H, dn, R) / (..., H, R, dv): shard the head axis
+            if self.attn_tp:
+                sp = [None] * nd
+                sp[nd - 3] = "model"
+                return P(*sp)
+            return P()
+        if name in ("wdkv", "wkr", "q_norm", "kv_norm"):
+            return P()
+        # dense FFN
+        if name in ("w_gate", "w_up"):
+            return col()
+        if name == "w_down":
+            return row()
+        # mamba (channel = d_inner parallel)
+        if name in ("in_proj", "dt_proj"):
+            return col()
+        if name in ("x_proj", "out_proj", "A_log"):
+            return row()
+        if name in ("conv_w",):
+            return col()
+        if name in ("conv_b", "dt_bias", "D_skip"):
+            return col() if self._div(shape[-1]) else P()
+        # norms and everything else: replicated
+        return P()
+
+    def params_shardings(self, param_specs):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                self.mesh, self.param_spec(path, leaf)),
+            param_specs)
+
+    # -- activations / batch ---------------------------------------------------------
+
+    def batch_spec(self, batch_size: int) -> P:
+        if batch_size % self.dp_size == 0:
+            return P(self.dp)
+        if "data" in self.dp and batch_size % self.mesh.shape["data"] == 0:
+            return P(("data",))
+        return P()
+
+    def data_shardings(self, batch_specs, batch_size: int):
+        bspec = self.batch_spec(batch_size)
+
+        def one(path, leaf):
+            sp = [None] * len(leaf.shape)
+            if len(leaf.shape) >= 1 and leaf.shape[0] == batch_size \
+                    and bspec != P():
+                sp[0] = bspec[0]
+            return NamedSharding(self.mesh, P(*sp))
+
+        return jax.tree_util.tree_map_with_path(one, batch_specs)
+
+    # -- decode cache ------------------------------------------------------------------
+
+    def cache_shardings(self, cache_specs, batch_size: int):
+        """Decode-cache sharding: batch over DP, plus a 'model'-axis shard
+        on the widest cache dimension:
+
+        * GQA K/V (..., B, W, Hkv, Dh): kv-heads over 'model' when they
+          divide, else the window W (context-parallel decode — the
+          GQA-kv<TP production layout).
+        * MLA latent (..., B, W, R): window over 'model' (R stays whole
+          for the absorbed matmuls).
+        * Mamba states (..., d_conv|d_inner, d_inner|N): d_inner over
+          'model' (matches the channel-parallel mamba weights).
+        """
+        cfg = self.cfg
+        bspec = self.batch_spec(batch_size)
+        Dh = cfg.resolved_head_dim() if cfg.num_heads else 0
+        Hkv = cfg.num_kv_heads
+        d_inner = (cfg.mamba.expand * cfg.d_model) if cfg.mamba else 0
+        mla_dims = ((cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim)
+                    if cfg.mla else ())
+
+        def one(path, leaf):
+            shape = leaf.shape
+            nd = len(shape)
+            sp = [None] * nd
+            model_axis = None
+            if nd >= 4 and shape[-1] == Dh and shape[-2] == Hkv:
+                # GQA-style K/V cache
+                if self.kv_tp:
+                    model_axis = nd - 2
+                elif shape[-3] % self.model_size == 0:
+                    model_axis = nd - 3          # context-parallel window
+            elif nd >= 3 and mla_dims and shape[-1] in mla_dims:
+                if shape[-2] % self.model_size == 0:
+                    model_axis = nd - 2          # latent window
+            elif d_inner and nd >= 2 and shape[-1] == d_inner:
+                model_axis = nd - 1              # mamba conv state
+            elif d_inner and nd >= 2 and shape[-2] == d_inner:
+                model_axis = nd - 2              # mamba ssm state
+            if model_axis is not None:
+                sp[model_axis] = "model"
+            if bspec != P():
+                dims = [i for i, s in enumerate(shape)
+                        if s == batch_size and i != model_axis]
+                if dims:
+                    sp[dims[0]] = bspec[0]
+            return NamedSharding(self.mesh, P(*sp))
+
+        return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+    def replicated(self, specs):
+        return jax.tree_util.tree_map(
+            lambda _: NamedSharding(self.mesh, P()), specs)

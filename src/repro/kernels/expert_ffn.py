@@ -1,0 +1,71 @@
+"""Grouped expert SwiGLU FFN kernel (the MoE compute hot spot).
+
+Tiling strategy (TPU-native, MXU-aligned):
+  grid = (E, C/Cb, F/Fb); each program computes the contribution of one
+  (expert, token-block, ff-block) tile:
+
+      h_f = silu(x @ gate[:, f]) * (x @ up[:, f])      (Cb, Fb)
+      out += h_f @ down[f, :]                           (Cb, D)
+
+  The f axis is innermost → the (Cb, D) output accumulator tile stays
+  resident in VMEM across the F sweep (initialized at f==0).  All matmul
+  dims are multiples of 128 so the MXU runs dense.  VMEM working set per
+  program ≈ x(Cb·D) + gate/up/down(D·Fb·3) + out(Cb·D) — e.g.
+  Cb=128, Fb=256, D=4096, bf16: ~8.5 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_ffn_kernel(x_ref, g_ref, u_ref, d_ref, o_ref):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                      # (Cb, D)
+    g = g_ref[0]                                      # (D, Fb)
+    u = u_ref[0]
+    d = d_ref[0]                                      # (Fb, D)
+    h = jax.nn.silu(jnp.dot(x, g, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, u, preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(h.astype(x.dtype), d,
+                          preferred_element_type=jnp.float32)[None]
+
+
+def expert_ffn_pallas(x, gate_w, up_w, down_w, *, block_c: int = 128,
+                      block_f: int = 256, interpret: bool = False):
+    """x: (E, C, D); gate/up: (E, D, F); down: (E, F, D) -> (E, C, D)."""
+    E, C, D = x.shape
+    F = gate_w.shape[-1]
+    Cb = min(block_c, C)
+    Fb = min(block_f, F)
+    Cp = ((C + Cb - 1) // Cb) * Cb
+    Fp = ((F + Fb - 1) // Fb) * Fb
+    if Cp != C:
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, 0)))
+    if Fp != F:
+        gate_w = jnp.pad(gate_w, ((0, 0), (0, 0), (0, Fp - F)))
+        up_w = jnp.pad(up_w, ((0, 0), (0, 0), (0, Fp - F)))
+        down_w = jnp.pad(down_w, ((0, 0), (0, Fp - F), (0, 0)))
+
+    out = pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=(E, Cp // Cb, Fp // Fb),
+        in_specs=[
+            pl.BlockSpec((1, Cb, D), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, D, Fb), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, D, Fb), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, Fb, D), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Cb, D), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, D), jnp.float32),
+        interpret=interpret,
+    )(x, gate_w, up_w, down_w)
+    return out[:, :C].astype(x.dtype)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile natively.  ``use_pallas=False`` falls back to the jnp oracle —
+the serving engine uses the oracle on CPU for speed, the kernels are the
+TPU deployment path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.expert_ffn import expert_ffn_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.router_topk import router_topk_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def router_topk(logits, expert_mask, k: int, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.router_topk_ref(logits, expert_mask, k)
+    return router_topk_pallas(logits, expert_mask, k, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def expert_ffn(x, gate_w, up_w, down_w, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.expert_ffn_ref(x, gate_w, up_w, down_w)
+    return expert_ffn_pallas(x, gate_w, up_w, down_w, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
+                    use_pallas: bool = True):
+    if not use_pallas:
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_table,
+                                       seq_lens)
+    return paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens,
+                                  interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ssm_scan(u, dt, A, B_ssm, C_ssm, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.ssm_scan_ref(u, dt, A, B_ssm, C_ssm)
+    return ssm_scan_pallas(u, dt, A, B_ssm, C_ssm, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_prefill(q, k, v, causal: bool = True, use_pallas: bool = True):
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    if not use_pallas:
+        return ref.flash_prefill_ref(q, k, v, causal)
+    return flash_prefill_pallas(q, k, v, causal=causal,
+                                interpret=_on_cpu())

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions (interpret=True on CPU, compiled
+on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def router_topk_ref(logits, expert_mask, k: int):
+    """Fused routing oracle (§3.4 failure mask included).
+
+    logits: (T, E) f32; expert_mask: (E,) bool.
+    Returns (weights (T,k) f32 renormalized, indices (T,k) int32).
+    """
+    masked = jnp.where(expert_mask[None, :], logits.astype(jnp.float32),
+                       -jnp.inf)
+    gates = jax.nn.softmax(masked, axis=-1)
+    w, idx = jax.lax.top_k(gates, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def expert_ffn_ref(x, gate_w, up_w, down_w):
+    """Grouped expert SwiGLU FFN oracle.
+
+    x: (E, C, D); gate_w/up_w: (E, D, F); down_w: (E, F, D) -> (E, C, D).
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, gate_w,
+                               preferred_element_type=jnp.float32))
+    h = h * jnp.einsum("ecd,edf->ecf", x, up_w,
+                       preferred_element_type=jnp.float32)
+    y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), down_w,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens):
+    """Paged GQA decode attention oracle.
+
+    q: (B, H, Dh); pools: (num_blocks, bs, Hkv, Dh);
+    block_table: (B, max_blk) int32; seq_lens: (B,) int32 — number of valid
+    tokens (cache positions 0..len-1).  Returns (B, H, Dh).
+    """
+    B, H, Dh = q.shape
+    nb, bs, Hkv, _ = k_pool.shape
+    max_blk = block_table.shape[1]
+    G = H // Hkv
+    k = k_pool[block_table]            # (B, max_blk, bs, Hkv, Dh)
+    v = v_pool[block_table]
+    k = k.reshape(B, max_blk * bs, Hkv, Dh)
+    v = v.reshape(B, max_blk * bs, Hkv, Dh)
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(Dh))
+    pos = jnp.arange(max_blk * bs)[None, :]
+    s = jnp.where((pos < seq_lens[:, None])[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+def ssm_scan_ref(u, dt, A, B_ssm, C_ssm, h0=None):
+    """Selective-scan oracle.
+
+    u/dt: (B, S, d); A: (d, N); B_ssm/C_ssm: (B, S, N).
+    Returns (y (B, S, d) f32, h_final (B, d, N) f32).
+    """
+    Bsz, S, d = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d, N), jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A[None])
+        dBu = (dt_t * u_t)[..., None].astype(jnp.float32) * \
+            b_t[:, None, :].astype(jnp.float32)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h0, (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+                   B_ssm.swapaxes(0, 1), C_ssm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h
+
+
+def flash_prefill_ref(q, k, v, causal: bool = True):
+    """Full-sequence attention oracle for the flash prefill kernel.
+
+    q: (B, S, H, Dh); k/v: (B, S, Hkv, Dh) -> (B, S, H, Dh).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(Dh))
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Fused router kernel: mask → softmax → top-k → renormalize, one VMEM pass.
+
+The §3.4 missing-expert mask is a kernel *input*, so recovery changes
+routing by writing one small array — no recompilation, no weight touch.
+
+Tiling: grid over token blocks; each program holds a (Tb, E) logit tile in
+VMEM (E up to 512 comfortably: 256×512×4 B = 512 KiB) and runs k
+iterative argmax extractions on it.  E is padded to the 128-lane boundary
+by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _router_topk_kernel(logits_ref, mask_ref, w_ref, idx_ref, *, k: int,
+                        e_valid: int):
+    x = logits_ref[...].astype(jnp.float32)          # (Tb, Ep)
+    Tb, Ep = x.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (Tb, Ep), 1)
+    valid = (col < e_valid) & (mask_ref[...] != 0)[None, :]
+    x = jnp.where(valid, x, NEG_INF)
+
+    # numerically-stable softmax over the masked row
+    row_max = jnp.max(x, axis=1, keepdims=True)
+    ex = jnp.where(valid, jnp.exp(x - row_max), 0.0)
+    denom = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-30)
+    gates = ex / denom                                # (Tb, Ep)
+
+    work = gates
+    wsum = jnp.zeros((Tb, 1), jnp.float32)
+    ws, ids = [], []
+    for _ in range(k):
+        m = jnp.max(work, axis=1, keepdims=True)      # (Tb, 1)
+        # first column achieving the max
+        hit = work >= m
+        first = jnp.min(jnp.where(hit, col, Ep), axis=1, keepdims=True)
+        ws.append(m)
+        ids.append(first)
+        wsum = wsum + m
+        work = jnp.where(col == first, NEG_INF, work)
+    w = jnp.concatenate(ws, axis=1) / jnp.maximum(wsum, 1e-9)
+    w_ref[...] = w
+    idx_ref[...] = jnp.concatenate(ids, axis=1).astype(jnp.int32)
+
+
+def router_topk_pallas(logits, expert_mask, k: int, *, block_t: int = 256,
+                       interpret: bool = False):
+    """logits: (T, E) -> (weights (T,k) f32, indices (T,k) i32)."""
+    T, E = logits.shape
+    Ep = max(128, ((E + 127) // 128) * 128)
+    Tb = min(block_t, T)
+    Tpad = ((T + Tb - 1) // Tb) * Tb
+    lg = jnp.pad(logits, ((0, Tpad - T), (0, Ep - E)))
+    mask = jnp.pad(expert_mask.astype(jnp.int32), (0, Ep - E))
+
+    kernel = functools.partial(_router_topk_kernel, k=k, e_valid=E)
+    w, idx = pl.pallas_call(
+        kernel,
+        grid=(Tpad // Tb,),
+        in_specs=[
+            pl.BlockSpec((Tb, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((Ep,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((Tb, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tpad, k), jnp.float32),
+            jax.ShapeDtypeStruct((Tpad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lg, mask)
+    return w[:T], idx[:T]

@@ -1,0 +1,435 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Proves the distribution config is coherent without hardware: 512
+placeholder CPU devices stand in for 2 pods × 256 chips.  For each combo
+we ``.lower().compile()`` the real step function, print
+``memory_analysis()`` (fits/doesn't) and ``cost_analysis()`` (FLOPs,
+bytes), parse the collective ops out of the partitioned HLO, and emit the
+three roofline terms (EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k
+  python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+  python -m repro.launch.dryrun --list
+"""
+# The placeholder devices MUST be configured before any jax import —
+# device count locks on first backend init.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.distributed.collectives import make_moe_dist
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.specs import make_step, step_arg_specs
+from repro.models.model import Model
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# -- TPU v5e hardware constants (per chip) -----------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>[\w\[\],{}() ]+?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_ARR_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARR_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-type: count, result bytes (per device), est. wire traffic.
+
+    Wire-traffic model (ring algorithms, group size n):
+      all-reduce       2·S·(n-1)/n      S = per-device operand bytes
+      all-gather       S·(n-1)/n        S = per-device *result* bytes
+      reduce-scatter   S·(n-1)          S = per-device result (S·n input)
+      all-to-all       S·(n-1)/n
+      collective-permute  S
+    """
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line.split("=")[0]:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("shape"))
+        n = 1
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            n = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                n = len(gl.group(1).split(","))
+        if n <= 1:
+            n = 2  # conservative: unknown group
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            wire = 2 * size * frac
+        elif op == "all-gather":
+            wire = size * frac
+        elif op == "reduce-scatter":
+            wire = size * (n - 1)
+        elif op == "all-to-all":
+            wire = size * frac
+        else:
+            wire = size
+        s = stats.setdefault(op, {"count": 0, "bytes": 0.0, "wire": 0.0})
+        s["count"] += 1
+        s["bytes"] += size
+        s["wire"] += wire
+    return stats
+
+
+def model_flops_params(cfg) -> Dict[str, float]:
+    """Active / total matmul params for MODEL_FLOPS (6·N·D or 2·N·D)."""
+    model = Model(cfg, dtype=jnp.bfloat16)
+    specs = model.param_specs()
+    total = expert = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "moe" in keys and keys[-1] in ("gate", "up", "down"):
+            expert += n
+        if keys[-1] == "embed":
+            embed += n
+    active = total - embed - expert
+    if cfg.moe is not None and expert:
+        from repro.models.moe import physical_experts
+        active += expert * cfg.moe.top_k / physical_experts(cfg.moe)
+    return {"total": float(total), "active": float(active),
+            "expert": float(expert)}
+
+
+# perf-experiment knobs (set by run_dryrun)
+_FORCE_ATTN_TP = False
+_DONATE = False
+
+
+def _jit_step(step, in_sh, kind: str):
+    donate = ()
+    if _DONATE:
+        donate = (0, 1) if kind == "train" else (
+            (1,) if kind == "decode" else ())
+    return jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+
+
+def layer_units(cfg) -> int:
+    """Number of repeated 'layer units' for cost extrapolation.
+
+    unit = plain layer (dense/ssm/vlm), MoE layer (moe families,
+    excluding the fixed first-k dense layers), Jamba period, or
+    encoder+decoder layer pair (audio).
+    """
+    if cfg.hybrid_period:
+        return cfg.num_layers // cfg.hybrid_period
+    if cfg.family == "audio":
+        return cfg.num_layers  # == encoder_layers
+    if cfg.moe is not None:
+        return cfg.num_layers - cfg.moe.first_k_dense
+    return cfg.num_layers
+
+
+def with_units(cfg, n_units: int):
+    import dataclasses
+    if cfg.hybrid_period:
+        return dataclasses.replace(cfg, num_layers=n_units * cfg.hybrid_period)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, num_layers=n_units,
+                                   encoder_layers=n_units)
+    if cfg.moe is not None:
+        return dataclasses.replace(
+            cfg, num_layers=n_units + cfg.moe.first_k_dense)
+    return dataclasses.replace(cfg, num_layers=n_units)
+
+
+def _cost_of(cfg, shape, mesh, moe_impl: str):
+    """Compile an UNROLLED depth-reduced variant and return
+    (flops, bytes, wire_bytes, collectives) per device.
+
+    XLA cost_analysis counts a while-loop body once (verified), so the
+    full-depth scanned module undercounts; we compile unrolled at 2 and 4
+    layer-units and extrapolate linearly — exact for homogeneous stacks.
+    """
+    dist = (make_moe_dist(mesh, moe_impl, dp_axes=dp_axes(mesh))
+            if cfg.moe is not None else None)
+    model = Model(cfg, dtype=jnp.bfloat16, moe_dist=dist)
+    step = make_step(model, shape.kind)
+    args = step_arg_specs(model, cfg, shape)
+    in_sh = build_in_shardings(model, cfg, shape, mesh, args)
+    compiled = _jit_step(step, in_sh, shape.kind).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    wire = sum(s["wire"] for s in coll.values())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), wire, coll)
+
+
+def extrapolated_cost(cfg, shape, mesh, moe_impl: str):
+    """Linear-in-depth cost model from 2- and 4-unit unrolled compiles."""
+    import dataclasses
+    units_full = layer_units(cfg)
+    u_small, u_big = 2, 4
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    f2, b2, w2, _ = _cost_of(with_units(cfg_u, u_small), shape, mesh,
+                             moe_impl)
+    f4, b4, w4, c4 = _cost_of(with_units(cfg_u, u_big), shape, mesh,
+                              moe_impl)
+    du = u_big - u_small
+
+    def ext(small, big):
+        per = (big - small) / du
+        return small + (units_full - u_small) * per, per
+
+    flops, flops_per = ext(f2, f4)
+    bytes_, bytes_per = ext(b2, b4)
+    wire, wire_per = ext(w2, w4)
+    return {
+        "flops": flops, "bytes": bytes_, "wire": wire,
+        "per_unit": {"flops": flops_per, "bytes": bytes_per,
+                     "wire": wire_per},
+        "fixed": {"flops": f2 - 2 * flops_per, "bytes": b2 - 2 * bytes_per,
+                  "wire": w2 - 2 * wire_per},
+        "units": units_full,
+        "collectives_4unit": c4,
+    }
+
+
+def build_in_shardings(model: Model, cfg, shape, mesh, args):
+    rules = ShardingRules(mesh, cfg)
+    if _FORCE_ATTN_TP:
+        # uneven head sharding (GSPMD pads internally), perf experiment
+        rules.attn_tp = True
+        rules.kv_tp = True
+    B = shape.global_batch
+    params_sh = rules.params_shardings(args[0])
+    if shape.kind == "train":
+        opt_sh = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                mesh, rules.param_spec(path, leaf)), args[1])
+        batch_sh = rules.data_shardings(args[2], B)
+        return (params_sh, opt_sh, batch_sh)
+    if shape.kind == "prefill":
+        batch_sh = rules.data_shardings(args[1], B)
+        rt_sh = rules.replicated(args[2])
+        return (params_sh, batch_sh, rt_sh)
+    cache_sh = rules.cache_shardings(args[1], B)
+    tok_sh = NamedSharding(mesh, rules.batch_spec(B))
+    rt_sh = rules.replicated(args[3])
+    return (params_sh, cache_sh, tok_sh, rt_sh)
+
+
+def apply_cfg_patch(cfg, patch: Optional[Dict]):
+    """dataclasses.replace with dotted keys for nested moe fields,
+    e.g. {"moe.min_capacity": 1, "sliding_window": 4096}."""
+    import dataclasses
+    if not patch:
+        return cfg
+    top, moe_kw = {}, {}
+    for k, v in patch.items():
+        if k.startswith("moe."):
+            moe_kw[k[4:]] = v
+        else:
+            top[k] = v
+    if moe_kw:
+        top["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
+    return dataclasses.replace(cfg, **top)
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               moe_impl: str = "gather_psum", save_hlo: Optional[str] = None,
+               extrapolate: bool = True, verbose: bool = True,
+               cfg_patch: Optional[Dict] = None,
+               force_attn_tp: bool = False, donate_state: bool = False
+               ) -> Dict:
+    t_start = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cfg = get_config(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat=(shape.kind == "train"))
+    cfg = apply_cfg_patch(cfg, cfg_patch)
+    global _FORCE_ATTN_TP, _DONATE
+    _FORCE_ATTN_TP = force_attn_tp
+    _DONATE = donate_state
+    dist = (make_moe_dist(mesh, moe_impl, dp_axes=dp_axes(mesh))
+            if cfg.moe is not None else None)
+    model = Model(cfg, dtype=jnp.bfloat16, moe_dist=dist)
+    step = make_step(model, shape.kind)
+    args = step_arg_specs(model, cfg, shape)
+    in_sh = build_in_shardings(model, cfg, shape, mesh, args)
+
+    t0 = time.perf_counter()
+    lowered = _jit_step(step, in_sh, shape.kind).lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    coll = parse_collectives(hlo)
+
+    # exact per-device costs via depth extrapolation (see extrapolated_cost)
+    if extrapolate:
+        ext = extrapolated_cost(cfg, shape, mesh, moe_impl)
+    else:  # multi-pod runs only prove lower+compile; roofline is 1-pod
+        ext = {"flops": 0.0, "bytes": 0.0,
+               "wire": sum(s["wire"] for s in coll.values()),
+               "per_unit": {}, "fixed": {}, "units": layer_units(cfg),
+               "collectives_4unit": {}}
+    flops = ext["flops"]
+    bytes_acc = ext["bytes"]
+    wire = ext["wire"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = wire / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    mp = model_flops_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * mp["active"] * tokens
+    hlo_flops_total = flops * n_chips
+    useful = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(n_chips), "kind": shape.kind, "moe_impl":
+            moe_impl if cfg.moe else None,
+        "lower_s": t1 - t0, "compile_s": t2 - t1,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_acc,
+        "cost_extrapolation": {k: ext[k] for k in
+                               ("per_unit", "fixed", "units")},
+        "collectives": coll,                    # full scanned module
+        "collectives_4unit": ext["collectives_4unit"],
+        "collective_wire_bytes": wire,
+        "roofline": {**terms, "dominant": dominant},
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_flops_total,
+        "useful_flops_ratio": useful,
+        "params": mp,
+        "elapsed_s": time.perf_counter() - t_start,
+    }
+    if verbose:
+        gb = 1 << 30
+        print(f"== {arch} × {shape_name} × {rec['mesh']} "
+              f"({shape.kind}, moe_impl={rec['moe_impl']}) ==")
+        print(f"  lower {rec['lower_s']:.1f}s  compile {rec['compile_s']:.1f}s")
+        print(f"  memory/device: args {mem.argument_size_in_bytes / gb:.2f} GiB"
+              f"  temp {mem.temp_size_in_bytes / gb:.2f} GiB"
+              f"  out {mem.output_size_in_bytes / gb:.2f} GiB")
+        print(f"  per-device: {flops / 1e12:.2f} TFLOP, "
+              f"{bytes_acc / 1e9:.1f} GB accessed, "
+              f"wire {wire / 1e9:.3f} GB")
+        print(f"  roofline: compute {compute_s * 1e3:.2f} ms | memory "
+              f"{memory_s * 1e3:.2f} ms | collective {coll_s * 1e3:.2f} ms "
+              f"-> {dominant}")
+        print(f"  MODEL_FLOPS/HLO_FLOPS = {useful:.3f}")
+        for op, s in sorted(coll.items()):
+            print(f"    {op:20s} n={s['count']:4d} bytes={s['bytes']/1e9:.3f}GB"
+                  f" wire={s['wire']/1e9:.3f}GB")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-impl", default="gather_psum",
+                    choices=["gather_psum", "a2a"])
+    ap.add_argument("--out", default=None, help="write JSON record here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the cost-extrapolation compiles")
+    ap.add_argument("--list", action="store_true")
+    # perf-experiment knobs (§Perf)
+    ap.add_argument("--min-capacity", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--force-attn-tp", action="store_true")
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--cache-carry", action="store_true")
+    ap.add_argument("--num-heads", type=int, default=None,
+                    help="pad/override head count (perf experiment)")
+    args = ap.parse_args(argv)
+    if args.list:
+        for a in ALL_ARCHS:
+            print(a)
+        return 0
+    assert args.arch and args.shape, "--arch and --shape required"
+    patch = {}
+    if args.min_capacity is not None:
+        patch["moe.min_capacity"] = args.min_capacity
+    if args.capacity_factor is not None:
+        patch["moe.capacity_factor"] = args.capacity_factor
+    if args.cache_carry:
+        patch["decode_cache_carry"] = True
+    if args.num_heads is not None:
+        patch["num_heads"] = args.num_heads
+        patch["num_kv_heads"] = args.num_heads
+    rec = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
+                     moe_impl=args.moe_impl, save_hlo=args.save_hlo,
+                     extrapolate=not args.no_extrapolate,
+                     cfg_patch=patch or None,
+                     force_attn_tp=args.force_attn_tp,
+                     donate_state=args.donate)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

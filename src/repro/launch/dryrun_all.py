@@ -1,0 +1,95 @@
+"""Orchestrate the full dry-run matrix: 10 archs × 4 shapes × 2 meshes.
+
+Each combo runs in a fresh subprocess (jax device-count env must be set
+pre-import; failures stay isolated) with a timeout.  Results are cached
+as JSON under results/dryrun/ — re-running skips completed combos.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--only-single-pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../results/dryrun")
+
+
+def combo_path(arch: str, shape: str, mesh: str) -> str:
+    return os.path.abspath(os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh}.json"))
+
+
+def run_combo(arch: str, shape: str, multi_pod: bool,
+              timeout_s: int = 1500) -> dict:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    out = combo_path(arch, shape, mesh)
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd += ["--multi-pod", "--no-extrapolate"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "../.."))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout_s, env=env)
+        ok = proc.returncode == 0 and os.path.exists(out)
+        if not ok:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "error": proc.stderr[-3000:], "elapsed_s":
+                       time.time() - t0}
+            with open(out + ".err", "w") as f:
+                json.dump(rec, f, indent=2)
+            return rec
+        with open(out) as f:
+            return json.load(f)
+    except subprocess.TimeoutExpired:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh,
+               "error": f"timeout after {timeout_s}s"}
+        with open(out + ".err", "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only-single-pod", action="store_true")
+    ap.add_argument("--only-multi-pod", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1500)
+    args = ap.parse_args(argv)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    meshes = []
+    if not args.only_multi_pod:
+        meshes.append(False)
+    if not args.only_single_pod:
+        meshes.append(True)
+    total = ok = 0
+    t0 = time.time()
+    for multi_pod in meshes:
+        for arch in ASSIGNED_ARCHS:
+            for shape in INPUT_SHAPES:
+                total += 1
+                rec = run_combo(arch, shape, multi_pod, args.timeout)
+                status = "ERR " if "error" in rec else "ok  "
+                if "error" not in rec:
+                    ok += 1
+                print(f"[{time.time() - t0:7.0f}s] {status} {arch:24s} "
+                      f"{shape:12s} {'2x16x16' if multi_pod else '16x16'}",
+                      flush=True)
+    print(f"done: {ok}/{total} combos succeeded")
+    return 0 if ok == total else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

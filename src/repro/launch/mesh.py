@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi pod:  2×16×16 = 512 chips, axes ("pod", "data", "model").
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh():
+    """1×1 mesh over the real local device(s) — for CPU tests of the
+    distributed code paths."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,91 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the step-function argument specs for
+the given input shape's kind; ``make_step(model, kind)`` returns the
+function to lower.  Modality frontends are stubs per the assignment:
+audio supplies precomputed frame embeddings, VLM precomputed patch
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import Model
+from repro.training.optimizer import OptimizerConfig, init_adamw
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, with_loss_mask: bool,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        out = {"tokens": sds((B, S - P), jnp.int32),
+               "patches": sds((B, P, cfg.d_model), dtype)}
+        if with_loss_mask:
+            out["loss_mask"] = sds((B, S - P), jnp.int32)
+        return out
+    out = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dtype)
+    if with_loss_mask:
+        out["loss_mask"] = sds((B, S), jnp.int32)
+    return out
+
+
+def decode_specs(model: Model, shape: InputShape) -> Tuple:
+    """(cache_specs, token_specs) for a serve_step with a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = sds((B,), jnp.int32)
+    return cache, tokens
+
+
+def runtime_specs(model: Model):
+    rt = model.default_runtime()
+    if rt is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda x: sds(x.shape, x.dtype), rt)
+
+
+def make_step(model: Model, kind: str, opt_cfg: OptimizerConfig = None
+              ) -> Callable:
+    if kind == "train":
+        from repro.training.train_loop import make_train_step
+        return make_train_step(model, opt_cfg or OptimizerConfig())
+    if kind == "prefill":
+        def prefill_step(params, batch, runtime):
+            last, cache = model.prefill(params, batch, runtime)
+            next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return next_tok, cache
+        return prefill_step
+    if kind == "decode":
+        def serve_step(params, cache, tokens, runtime):
+            logits, cache = model.decode_step(params, cache, tokens, runtime)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache
+        return serve_step
+    raise ValueError(kind)
+
+
+def step_arg_specs(model: Model, cfg: ModelConfig, shape: InputShape,
+                   dtype=jnp.bfloat16) -> Tuple:
+    """Argument ShapeDtypeStructs matching make_step's signature."""
+    params = model.param_specs()
+    if shape.kind == "train":
+        opt = jax.eval_shape(init_adamw, params)
+        batch = batch_specs(cfg, shape, with_loss_mask=True, dtype=dtype)
+        return (params, opt, batch)
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, with_loss_mask=False, dtype=dtype)
+        return (params, batch, runtime_specs(model))
+    cache, tokens = decode_specs(model, shape)
+    return (params, cache, tokens, runtime_specs(model))

@@ -1,0 +1,76 @@
+"""Training launcher: real steps on local devices, or AOT against the
+production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \
+      --smoke --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch kimi-k2-1t-a32b \
+      --aot            # lower+compile train_4k for the 16x16 mesh
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, real training on local devices")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT lower+compile for the production mesh")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.aot:
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
+        from repro.launch.dryrun import run_dryrun
+        run_dryrun(args.arch, "train_4k", multi_pod=args.multi_pod,
+                   extrapolate=False)
+        return 0
+
+    from repro.configs import get_smoke_config, get_config
+    from repro.models.model import Model
+    from repro.training.data import DataConfig, lm_batches, make_batch
+    from repro.training.train_loop import train
+    import numpy as np
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch)
+
+    def batches():
+        step = 0
+        while True:
+            b = make_batch(dc, step)
+            if cfg.family == "vlm":
+                P = cfg.num_patches
+                b = {"tokens": b["tokens"],
+                     "patches": np.random.default_rng(step).normal(
+                         size=(args.batch, P, cfg.d_model)).astype("float32"),
+                     "loss_mask": b["loss_mask"]}
+            if cfg.family == "audio":
+                b["frames"] = np.random.default_rng(step).normal(
+                    size=(args.batch, cfg.encoder_seq, cfg.d_model)
+                ).astype("float32")
+            yield b
+            step += 1
+
+    params, history = train(model, batches(), args.steps, log_every=10)
+    for h in history:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"lr {h['lr']:.2e} gnorm {h['grad_norm']:.2f} "
+              f"({h['elapsed_s']:.1f}s)")
+    print(f"final loss: {history[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Dense feed-forward variants: SwiGLU and squared-ReLU (Nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split_keys
+
+
+def ffn_init(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    if activation == "swiglu":
+        ks = split_keys(key, 3)
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    if activation == "relu2":
+        ks = split_keys(key, 2)
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+        }
+    raise ValueError(activation)
+
+
+def ffn_apply(p, x, activation: str):
+    if activation == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if activation == "relu2":
+        return jnp.square(jax.nn.relu(x @ p["w_up"])) @ p["w_down"]
+    raise ValueError(activation)

@@ -1,0 +1,98 @@
+"""Shared model primitives: norms, rotary embeddings, init helpers."""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# Vocab is padded to a multiple of this so embed/lm_head shard cleanly over
+# the 16-way model axis (Megatron-style vocab padding; padding rows are
+# never routed to and their logits are masked at the loss).
+VOCAB_PAD_MULTIPLE = 2048
+
+
+def padded_vocab_size(cfg: ModelConfig) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return ((cfg.vocab_size + m - 1) // m) * m
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def rope_sincos(positions: jnp.ndarray, dim: int, theta: float):
+    """sin/cos tables for given integer positions.
+
+    positions: (...,) int32 -> returns sin, cos with shape (..., dim/2).
+    """
+    assert dim % 2 == 0, dim
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., dim/2)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: (..., dim); sin/cos broadcastable to (..., dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # sin/cos enter as (..., dim/2); broadcast over head axes as needed.
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "swiglu":
+        # handled by caller (two projections); this is the gate nonlinearity
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def stack_init(key, n: int, init_fn):
+    """Initialize ``n`` copies of a param pytree, stacked on a leading axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def take_layer(stacked, i: int):
+    """Slice layer ``i`` out of a stacked param pytree (python-int index)."""
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Mean next-token CE over positions where mask=1.
+
+    logits: (B, S, Vpad) — padded vocab columns are excluded via logit mask.
+    labels: (B, S) int32, mask: (B, S) {0,1}.
+    """
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vpad > vocab_size:
+        col = jnp.arange(vpad) < vocab_size
+        logits = jnp.where(col[None, None, :], logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom

@@ -1,0 +1,137 @@
+"""Mamba-1 selective SSM block (falcon-mamba, Jamba mixer).
+
+Full-sequence path runs a `lax.scan` over time (O(S) state recurrence —
+the sub-quadratic property long_500k relies on); decode is a single O(1)
+state update.  The chunked Pallas formulation lives in
+``repro.kernels.ssm_scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv, d_inner) rolling window of conv inputs
+    ssm: jnp.ndarray   # (B, d_inner, N)
+
+
+def mamba_dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    return d_inner, m.d_state, m.d_conv, m.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mamba
+    D = cfg.d_model
+    d_inner, N, d_conv, dt_rank = mamba_dims(cfg)
+    ks = split_keys(key, 5)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                         (d_inner, N))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(dtype),
+        "D_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, D, dtype),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    d_inner, N, d_conv, _ = mamba_dims(cfg)
+    return MambaState(
+        jnp.zeros((batch, d_conv, d_inner), dtype),
+        jnp.zeros((batch, d_inner, N), dtype),
+    )
+
+
+def _ssm_coeffs(p, cfg: ModelConfig, u):
+    """Shared input-dependent SSM coefficients. u: (..., d_inner)."""
+    _, N, _, dt_rank = mamba_dims(cfg)
+    proj = u @ p["x_proj"]
+    dt_raw = proj[..., :dt_rank]
+    B_ssm = proj[..., dt_rank:dt_rank + N]
+    C_ssm = proj[..., dt_rank + N:]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (..., d_inner)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (d_inner, N)
+    return dt, A, B_ssm, C_ssm
+
+
+def mamba_forward(p, cfg: ModelConfig, x, *, return_state=False):
+    """Full-sequence mamba. x: (B, S, D) -> (B, S, D) [, MambaState]."""
+    B, S, D = x.shape
+    d_inner, N, d_conv, dt_rank = mamba_dims(cfg)
+
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                            # (B,S,d_inner)
+
+    # causal depthwise conv over time
+    u_pad = jnp.pad(u, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(
+        u_pad[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+        for i in range(d_conv)
+    ) + p["conv_b"]
+    u = jax.nn.silu(conv)
+
+    dt, A, B_ssm, C_ssm = _ssm_coeffs(p, cfg, u)
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs       # (B,d_inner),(B,d_inner),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])                 # (B,d_inner,N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]
+        h = dA * h.astype(jnp.float32) + dBu.astype(jnp.float32)
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y_t.astype(u_t.dtype)
+
+    h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+         B_ssm.swapaxes(0, 1), C_ssm.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + u * p["D_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv state = last d_conv raw (pre-conv) inputs
+        raw = jnp.split(xz, 2, axis=-1)[0]
+        if S >= d_conv:
+            conv_state = raw[:, -d_conv:, :]
+        else:
+            conv_state = jnp.pad(raw, ((0, 0), (d_conv - S, 0), (0, 0)))
+        return out, MambaState(conv_state.astype(x.dtype),
+                               h_final.astype(x.dtype))
+    return out
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state: MambaState):
+    """Single-token decode. x: (B, D) -> (B, D), new state."""
+    B, D = x.shape
+    d_inner, N, d_conv, _ = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    u_raw, z = jnp.split(xz, 2, axis=-1)                        # (B, d_inner)
+
+    conv_buf = jnp.concatenate(
+        [state.conv[:, 1:, :], u_raw[:, None, :].astype(state.conv.dtype)],
+        axis=1)                                                 # (B,d_conv,di)
+    conv = jnp.einsum("bcd,cd->bd", conv_buf.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    u = jax.nn.silu(conv).astype(x.dtype)
+
+    dt, A, B_ssm, C_ssm = _ssm_coeffs(p, cfg, u)
+    dA = jnp.exp(dt[..., None] * A[None])                       # (B,d_inner,N)
+    dBu = (dt * u)[..., None] * B_ssm[:, None, :]
+    h = dA * state.ssm.astype(jnp.float32) + dBu.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm.astype(jnp.float32)).astype(x.dtype)
+    y = (y + u * p["D_skip"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], MambaState(conv_buf, h.astype(state.ssm.dtype))

@@ -1,0 +1,44 @@
+"""Slot-wise operations on decode caches.
+
+The executor's decode cache is a fixed-max-batch pytree; requests occupy
+slots.  Batch axes differ per leaf (stacked layer caches carry the batch
+on axis 1, ``pos`` on axis 0, hybrid SSM states on axis 2), so we infer
+the batch axis per leaf once by comparing eval_shapes at two batch sizes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def infer_batch_axes(model, max_seq: int):
+    """Returns a pytree (matching the cache) of int batch-axis per leaf."""
+    s1 = jax.eval_shape(lambda: model.init_cache(1, max_seq))
+    s2 = jax.eval_shape(lambda: model.init_cache(2, max_seq))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        assert len(diffs) == 1, (a.shape, b.shape)
+        return diffs[0]
+
+    return jax.tree_util.tree_map(axis, s1, s2)
+
+
+def write_slot(cache, sub, slot: int, axes):
+    """Write a batch=1 sub-cache into slot ``slot`` of the batched cache."""
+    def upd(c, s, ax):
+        idx = [slice(None)] * c.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return c.at[tuple(idx)].set(s.astype(c.dtype))
+    return jax.tree_util.tree_map(upd, cache, sub, axes)
+
+
+def read_slot(cache, slot: int, axes):
+    """Extract slot ``slot`` as a batch=1 sub-cache."""
+    def rd(c, ax):
+        idx = [slice(None)] * c.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return c[tuple(idx)]
+    return jax.tree_util.tree_map(rd, cache, axes)

@@ -1,0 +1,488 @@
+"""FlowServe-style inference engine with ReviveMoE recovery wired in.
+
+One process simulates the whole deployment: executors are logical ranks
+owning physically separate state (expert shards, KV caches, block
+tables), so injected hardware failures destroy real state and recovery
+manipulates real data structures, real compiled executables, and real
+weight files.
+
+Two deployment modes (§2.2):
+* ``collocated``   — every device hosts attention + an EP expert shard.
+* ``disaggregated`` — DPExecutors (attention) and MoEExecutors (experts)
+  on separate devices; MoE failures can role-switch a DP rank (§3.4).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.comm_domain import CommDomain
+from repro.core.detection import (AnnotationPoller, HeartbeatMonitor,
+                                  StragglerDetector)
+from repro.core.expert_map import ExpertMap
+from repro.core.faults import FaultInjector, SimulatedDeviceFailure
+from repro.core.graph_cache import GraphCache
+from repro.core.weights import DenseFFNGroups, RecoveryPolicy
+from repro.models.model import Model
+from repro.serving.executor import DPExecutor, MoEExecutor, next_bucket
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import SamplingParams
+from repro.serving.weights_util import (assemble, expert_checksums,
+                                        split_experts)
+from repro.training.checkpoint import restore_like, save_checkpoint
+
+
+class _Timer:
+    def __init__(self, sink: Dict[str, float], key: str):
+        self.sink, self.key = sink, key
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.sink[self.key] = self.sink.get(self.key, 0.0) + (
+            time.perf_counter() - self.t0)
+
+
+def _specs(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), tree)
+
+
+def _decode_closure(model: Model, version: int):
+    def fn(params, cache, tokens, runtime):
+        return model.decode_step(params, cache, tokens, runtime)
+    fn.__name__ = f"decode_v{version}"
+    fn.__qualname__ = fn.__name__
+    return fn
+
+
+def _prefill_closure(model: Model, version: int, max_seq: int):
+    def fn(params, tokens, lengths, runtime):
+        batch = {"tokens": tokens, "lengths": lengths}
+        return model.prefill(params, batch, runtime, max_seq=max_seq)
+    fn.__name__ = f"prefill_v{version}"
+    fn.__qualname__ = fn.__name__
+    return fn
+
+
+class _Ctx:
+    """What an executor sees during compute: weights + compiled fns."""
+
+    def __init__(self, engine: "InferenceEngine"):
+        self.engine = engine
+        self.params = engine.params
+        self.runtime = engine.runtime
+
+    def decode_fn(self, *args):
+        return self.engine.get_compiled("decode")( *args)
+
+    def prefill_fn(self, bucket: int):
+        return self.engine.get_compiled("prefill", bucket)
+
+
+@dataclass
+class EngineConfig:
+    mode: str = "collocated"            # 'collocated' | 'disaggregated'
+    num_dp: int = 2
+    num_moe: int = 2                    # disaggregated only
+    max_batch: int = 4
+    max_seq: int = 128
+    block_size: int = 16
+    num_blocks: int = 128
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    seed: int = 0
+    workdir: str = "/tmp/repro_engine"
+    policy: RecoveryPolicy = field(default_factory=RecoveryPolicy)
+    precompile_failure_scenarios: bool = True
+    persist_cache_dir: Optional[str] = None
+    heartbeat_timeout_steps: int = 2
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg or EngineConfig()
+        assert self.ecfg.mode in ("collocated", "disaggregated")
+        if cfg.moe is None:
+            # dense model: no expert ranks; disaggregated degenerates
+            self.ecfg.mode = "collocated"
+        self.init_timings: Dict[str, float] = {}
+        self.step_no = 0
+        self.reports: List[Any] = []
+        self.all_requests: List[Request] = []
+        self._handled_faults: set = set()
+        # §4.3: role switches deferred by the background policy; executed
+        # between steps while service continues
+        self.pending_switches: List[Any] = []
+        self.background_reports: List[Dict] = []
+        self._build(first_time=True)
+
+    # -- construction / reinitialization ---------------------------------------
+
+    def _build(self, first_time: bool) -> Dict[str, float]:
+        ec = self.ecfg
+        t: Dict[str, float] = {}
+        with _Timer(t, "engine"):
+            # paper baseline is a *cached* reinit: the compile cache lives
+            # on disk (Dynamo/IR cache analogue = XLA persistent cache)
+            if ec.persist_cache_dir is None:
+                ec.persist_cache_dir = os.path.join(ec.workdir, "xla_cache")
+            self.graph_cache = getattr(self, "graph_cache", None) or \
+                GraphCache(ec.persist_cache_dir)
+            self.injector = getattr(self, "injector", None) or FaultInjector()
+            self.poller = AnnotationPoller(self.injector)
+            self.monitor = HeartbeatMonitor(ec.heartbeat_timeout_steps)
+            self.straggler = StragglerDetector()
+            self.model = Model(self.cfg)
+            os.makedirs(ec.workdir, exist_ok=True)
+            self.ckpt_path = os.path.join(ec.workdir, "weights.npz")
+
+        with _Timer(t, "generator"):
+            # model instantiation + weight loading + KV warmup
+            if os.path.exists(self.ckpt_path):
+                template = self.model.param_specs()
+                full_params = restore_like(self.ckpt_path, template)
+                full_params = jax.tree_util.tree_map(jnp.asarray, full_params)
+            else:
+                full_params = self.model.init(
+                    jax.random.PRNGKey(ec.seed))
+                save_checkpoint(self.ckpt_path, full_params)
+            self.ep_size = (ec.num_moe if ec.mode == "disaggregated"
+                            else ec.num_dp) if self.cfg.moe else 0
+            if self.cfg.moe is not None:
+                self.base_params, self.shards = split_experts(
+                    full_params, self.ep_size)
+                from repro.serving.weights_util import save_shard_checkpoints
+                save_shard_checkpoints(ec.workdir, self.shards)
+                self.expert_map = ExpertMap(self.cfg.moe, self.ep_size)
+                self.runtime = self.expert_map.runtime()
+                self.shard_alive = [True] * self.ep_size
+                self.params = assemble(self.base_params, self.shards,
+                                       self.shard_alive)
+                self.dense_groups = (
+                    DenseFFNGroups(max(2, self.ep_size // 2))
+                    if self.cfg.moe.first_k_dense else None)
+            else:
+                self.base_params, self.shards = full_params, []
+                self.expert_map = None
+                self.runtime = None
+                self.shard_alive = []
+                self.params = full_params
+                self.dense_groups = None
+            del full_params
+
+        with _Timer(t, "executor_processes"):
+            self.dp_executors: List[DPExecutor] = []
+            for i in range(ec.num_dp):
+                shard = None
+                ep_rank = None
+                if self.cfg.moe is not None and ec.mode == "collocated":
+                    shard, ep_rank = self.shards[i], i
+                self.dp_executors.append(DPExecutor(
+                    physical_id=i, dp_rank=i, model=self.model,
+                    max_batch=ec.max_batch, max_seq=ec.max_seq,
+                    num_blocks=ec.num_blocks, block_size=ec.block_size,
+                    sampling=ec.sampling, ep_rank=ep_rank, shard=shard))
+            self.moe_executors: List[MoEExecutor] = []
+            if self.cfg.moe is not None and ec.mode == "disaggregated":
+                for j in range(ec.num_moe):
+                    self.moe_executors.append(MoEExecutor(
+                        physical_id=ec.num_dp + j, ep_rank=j,
+                        shard=self.shards[j]))
+            for ex in self.dp_executors + self.moe_executors:
+                self.monitor.register(ex.physical_id, self.step_no)
+
+        with _Timer(t, "distributed_groups"):
+            # torch.distributed analogue: default world group + subgroups
+            self.world_group = [ex.physical_id for ex in
+                                self.dp_executors + self.moe_executors]
+
+        with _Timer(t, "xccl"):
+            self.domain = CommDomain(
+                ec.num_dp,
+                ec.num_moe if ec.mode == "disaggregated" else 0,
+                collocated=(ec.mode == "collocated"))
+            if not first_time:
+                self.domain.version = self._next_version
+            self.domain.rebuild()
+
+        # initial graph compilation (Fig. 1 "Read Cache"/"Compile")
+        self._compile_initial(t)
+
+        if first_time and ec.precompile_failure_scenarios:
+            with _Timer(t, "precompile_failure_scenarios"):
+                self._precompile_failure_graphs()
+
+        with _Timer(t, "other"):
+            from repro.core.revive import RecoveryManager
+            self.recovery = RecoveryManager(self)
+        self.init_timings = t
+        return t
+
+    @property
+    def _next_version(self) -> int:
+        return self.domain.version + 1 if hasattr(self, "domain") else 0
+
+    def _arg_specs(self, phase: str, bucket: Optional[int] = None):
+        p_specs = _specs(self.params)
+        r_specs = _specs(self.runtime)
+        if phase == "decode":
+            c_specs = jax.eval_shape(
+                lambda: self.model.init_cache(self.ecfg.max_batch,
+                                              self.ecfg.max_seq))
+            tok = jax.ShapeDtypeStruct((self.ecfg.max_batch,), jnp.int32)
+            return (p_specs, c_specs, tok, r_specs)
+        toks = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+        lens = jax.ShapeDtypeStruct((1,), jnp.int32)
+        return (p_specs, toks, lens, r_specs)
+
+    def _compile_initial(self, t: Dict[str, float]) -> None:
+        v = self.domain.version
+        key = ("decode", v, None)
+        fn = _decode_closure(self.model, v)
+        if key not in self.graph_cache:
+            _, tm = self.graph_cache.get_or_compile(
+                key, fn, self._arg_specs("decode"))
+            t["read_cache"] = t.get("read_cache", 0.0) + tm.read_cache_s
+            t["compile"] = t.get("compile", 0.0) + tm.compile_s
+        else:
+            self.graph_cache.get_or_compile(key, fn,
+                                            self._arg_specs("decode"))
+
+    def _precompile_failure_graphs(self) -> None:
+        """§3.6: precompile graphs for the anticipated failure scenario
+        (post-failure domain version), so recovery does a cached compile."""
+        v = self.domain.version + 1
+        self.graph_cache.precompile(
+            ("decode", v, None), _decode_closure(self.model, v),
+            self._arg_specs("decode"))
+        # the most common prefill bucket is needed right after migration
+        b = next_bucket(16, self.ecfg.max_seq)
+        self.graph_cache.precompile(
+            ("prefill", v, b),
+            _prefill_closure(self.model, v, self.ecfg.max_seq),
+            self._arg_specs("prefill", b))
+
+    # -- compiled-fn access ------------------------------------------------------
+
+    def get_compiled(self, phase: str, bucket: Optional[int] = None):
+        v = self.domain.version
+        key = (phase, v, bucket if phase == "prefill" else None)
+        if key in self.graph_cache:
+            fn, _ = self.graph_cache.get_or_compile(key, None, None)
+            return fn
+        if phase == "decode":
+            fn = _decode_closure(self.model, v)
+        else:
+            fn = _prefill_closure(self.model, v, self.ecfg.max_seq)
+        compiled, _ = self.graph_cache.get_or_compile(
+            key, fn, self._arg_specs(phase, bucket))
+        return compiled
+
+    # -- request API ----------------------------------------------------------------
+
+    def submit(self, prompt_tokens: List[int], max_new_tokens: int = 16,
+               eos_token: Optional[int] = None) -> Request:
+        req = Request(list(prompt_tokens), max_new_tokens,
+                      eos_token=eos_token)
+        self._assign(req)
+        self.all_requests.append(req)
+        return req
+
+    def _assign(self, req: Request) -> None:
+        healthy = [ex for ex in self.dp_executors
+                   if ex.alive and ex.cache is not None]
+        assert healthy, "no healthy attention ranks"
+        ex = min(healthy, key=lambda e: e.scheduler.num_requests)
+        req.dp_rank = ex.dp_rank
+        ex.scheduler.add_request(req)
+
+    @property
+    def unfinished(self) -> int:
+        return sum(1 for r in self.all_requests
+                   if r.state not in (RequestState.FINISHED,
+                                      RequestState.FAILED))
+
+    # -- main loop --------------------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        self.step_no += 1
+        # finish deferred role switches in the background (§4.3): service
+        # already resumed; these timings are not downtime
+        while self.pending_switches:
+            plan = self.pending_switches.pop(0)
+            self.background_reports.append(
+                self.recovery.complete_background_switch(plan))
+        self.injector.pre_step_faults(self.step_no)
+        for ev in self.poller.poll():
+            self._handle(ev)
+        for ev in self.monitor.check(self.step_no):
+            self._handle(ev)
+
+        active = [ex for ex in self.dp_executors
+                  if ex.alive and ex.cache is not None
+                  and ex.scheduler.num_requests]
+        for ex in active:
+            ex.plan()
+
+        # mid-step faults fire while the collective step is in flight
+        hit = False
+        for ex in active + [m for m in self.moe_executors if m.device_alive]:
+            try:
+                self.injector.maybe_fail_mid_step(self.step_no,
+                                                  ex.physical_id)
+            except SimulatedDeviceFailure:
+                ex.fail_device()
+                if ex.ep_rank is not None and self.expert_map is not None:
+                    pass  # handled by recovery via the annotation
+                hit = True
+        if hit:
+            # global stop: the step aborts with uncommitted logs everywhere;
+            # detection fires on the annotation we just recorded
+            for ev in self.poller.poll():
+                self._handle(ev)
+            return []
+
+        finished: List[Request] = []
+        ctx = _Ctx(self)
+        def real_compiles():
+            return sum(1 for t in self.graph_cache.timings
+                       if t.compile_s > 0.01)
+
+        for ex in active:
+            t0 = time.perf_counter()
+            n_compiles = real_compiles()
+            finished.extend(ex.compute(ctx, self.step_no))
+            ex.commit()
+            # slowdown detection (§6 future work): per-device step time;
+            # steps that triggered a fresh compile are not samples
+            if real_compiles() == n_compiles:
+                dt = (time.perf_counter() - t0) + ex.simulated_slowdown_s
+                self.straggler.record(ex.physical_id, dt)
+        for ev in self.straggler.check():
+            self._handle(ev)
+        for ex in self.dp_executors + self.moe_executors:
+            alive = (ex.device_alive if isinstance(ex, MoEExecutor)
+                     else ex.alive)
+            if alive:
+                self.monitor.beat(ex.physical_id, self.step_no)
+        return finished
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.unfinished:
+                break
+            done.extend(self.step())
+        return done
+
+    # -- failure handling ------------------------------------------------------------
+
+    def _handle(self, ev) -> None:
+        if ev.rank in self._handled_faults:
+            return
+        self._handled_faults.add(ev.rank)
+        report = self.recovery.recover(ev)
+        self.reports.append(report)
+        # inference was paused during recovery: reset the heartbeat clock
+        # for every surviving executor so the pause is not mistaken for a
+        # hang (the monitor resumes with inference)
+        for ex in self.dp_executors:
+            if ex.alive:
+                self.monitor.beat(ex.physical_id, self.step_no)
+        for mex in self.moe_executors:
+            if mex.device_alive:
+                self.monitor.beat(mex.physical_id, self.step_no)
+
+    # -- weight assembly -----------------------------------------------------------------
+
+    def reassemble_params(self) -> None:
+        if self.cfg.moe is None:
+            return
+        shard_arrays = []
+        for r in range(self.ep_size):
+            owner = self._shard_owner(r)
+            shard_arrays.append(owner.shard if owner is not None else None)
+        self.shard_alive = [s is not None for s in shard_arrays]
+        self.params = assemble(self.base_params,
+                               [s if s is not None else self.shards[r]
+                                for r, s in enumerate(shard_arrays)],
+                               self.shard_alive)
+
+    def _shard_owner(self, ep_rank: int):
+        """The executor currently hosting this EP rank's shard (or None)."""
+        if self.ecfg.mode == "collocated":
+            for ex in self.dp_executors:
+                if ex.ep_rank == ep_rank and ex.device_alive \
+                        and ex.shard is not None:
+                    return ex
+            return None
+        for mex in self.moe_executors:
+            if mex.ep_rank == ep_rank and mex.device_alive \
+                    and mex.shard is not None:
+                return mex
+        return None
+
+    def rebalance_experts(self, usage_counts) -> Dict[int, int]:
+        """Maintenance op: re-point redundant replica slots at the hottest
+        experts (paper §3.4/§4.3 — replicas follow usage frequency) and
+        physically copy the weights into the replica slots' shards."""
+        if self.expert_map is None:
+            return {}
+        emap = self.expert_map
+        moves = emap.rebalance_replicas(usage_counts)
+        for slot, logical in moves.items():
+            # copy weights from an alive source slot of `logical`
+            sources = [s for s in emap.replicas_of(logical) if s != slot]
+            if not sources:
+                continue
+            src = sources[0]
+            dst_owner = self._shard_owner(emap.rank_of_slot(slot))
+            src_owner = self._shard_owner(emap.rank_of_slot(src))
+            if dst_owner is None or src_owner is None:
+                continue
+            per = emap.slots_per_rank
+            s_loc, d_loc = src % per, slot % per
+            for key, arr in dst_owner.shard.items():
+                arr[:, d_loc] = src_owner.shard[key][:, s_loc]
+        self.runtime = emap.runtime()
+        self.reassemble_params()
+        return moves
+
+    def expert_integrity(self) -> Tuple[List[float], List[bool]]:
+        shard_arrays = [self._shard_owner(r).shard
+                        if self._shard_owner(r) else None
+                        for r in range(self.ep_size)]
+        return expert_checksums(shard_arrays), self.shard_alive
+
+    # -- baseline: full instance reinitialization (Fig. 1) ------------------------------
+
+    def full_reinit(self) -> Dict[str, float]:
+        """The baseline recovery: relaunch engine + executors, reload
+        weights, rebuild groups, cached-compile — everything, timed."""
+        in_flight = []
+        for ex in self.dp_executors:
+            if ex.alive and ex.cache is not None:
+                in_flight.extend(ex.scheduler.drain())
+        self.monitor = HeartbeatMonitor(self.ecfg.heartbeat_timeout_steps)
+        # process death: in-memory executables are gone (the on-disk
+        # persistent compile cache survives — that's the "cached" part)
+        self.graph_cache.invalidate(lambda k: True)
+        t = self._build(first_time=False)
+        # restore shard state for ranks that had died (weights came from
+        # disk in _build's generator stage — that's the point of reinit)
+        for req in in_flight:
+            if req.state not in (RequestState.FINISHED,):
+                req.state = RequestState.WAITING
+                self._assign(req)
+        self._handled_faults.clear()
+        return t

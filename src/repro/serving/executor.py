@@ -1,0 +1,187 @@
+"""Executors: DPExecutor (attention rank) and MoEExecutor (expert rank).
+
+A DPExecutor owns a local scheduler, paged-KV block accounting (with the
+§3.3 undo log), a fixed-max-batch decode cache, and heartbeats to the
+engine.  A MoEExecutor owns one EP rank's physical expert slots; its
+weights are destroyed if it fails.
+
+Steps are two-phase to model collective lockstep: ``plan`` (host work —
+admission, block allocation, all logged) then ``compute`` (the device
+step).  A fault between the phases leaves an uncommitted log, which
+recovery rolls back (§3.3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.block_log import BlockLog, BlockManager
+from repro.serving.cache_ops import infer_batch_axes, read_slot, write_slot
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import SamplingParams, sample
+from repro.serving.scheduler import LocalScheduler, StepPlan
+
+
+def next_bucket(n: int, max_seq: int, min_bucket: int = 16) -> int:
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return min(b, max_seq)
+
+
+class MoEExecutor:
+    """Stateless expert host: one EP rank's slice of the physical slots."""
+
+    def __init__(self, physical_id: int, ep_rank: int,
+                 shard: Dict[str, np.ndarray]):
+        self.physical_id = physical_id
+        self.ep_rank = ep_rank
+        self.shard: Optional[Dict[str, np.ndarray]] = shard
+        self.device_alive = True
+        self.process_alive = True
+
+    def fail_device(self) -> None:
+        """Hardware gone: the only copies of these weights are lost."""
+        self.device_alive = False
+        self.shard = None
+
+    def install_shard(self, shard: Dict[str, np.ndarray]) -> None:
+        self.shard = shard
+        self.device_alive = True
+        self.process_alive = True
+
+
+class DPExecutor:
+    def __init__(self, physical_id: int, dp_rank: int, model, *,
+                 max_batch: int, max_seq: int, num_blocks: int,
+                 block_size: int, sampling: SamplingParams,
+                 ep_rank: Optional[int] = None,
+                 shard: Optional[Dict[str, np.ndarray]] = None):
+        self.physical_id = physical_id
+        self.dp_rank = dp_rank
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampling = sampling
+        self.device_alive = True
+        self.process_alive = True
+        # collocated mode: this device also hosts an expert shard
+        self.ep_rank = ep_rank
+        self.shard = shard
+
+        self.block_manager = BlockManager(num_blocks, block_size)
+        self.block_log = BlockLog()
+        self.scheduler = LocalScheduler(max_batch, max_seq,
+                                        self.block_manager)
+        self.cache = model.init_cache(max_batch, max_seq)
+        self.batch_axes = infer_batch_axes(model, max_seq)
+        self.last_token = np.zeros((max_batch,), np.int32)
+        self.steps_done = 0
+        self._plan: Optional[StepPlan] = None
+        # injected extra per-step latency (straggler simulation)
+        self.simulated_slowdown_s = 0.0
+
+    # -- lifecycle --------------------------------------------------------------
+
+    @property
+    def alive(self) -> bool:
+        return self.device_alive and self.process_alive
+
+    def fail_device(self) -> None:
+        self.device_alive = False
+        if self.shard is not None:
+            self.shard = None  # collocated: expert weights die too
+
+    def terminate_process(self) -> None:
+        """Engine-side isolation of the failed/hanging process."""
+        self.process_alive = False
+        self._plan = None
+
+    def drop_attention_state(self) -> List[Request]:
+        """Role switch (§3.4): shed KV caches, scheduler, attention duty.
+
+        Returns the requests that must migrate elsewhere."""
+        reqs = self.scheduler.drain()
+        self.cache = None
+        self.block_log = BlockLog()
+        return reqs
+
+    # -- two-phase step -----------------------------------------------------------
+
+    def plan(self) -> StepPlan:
+        self.block_log.begin_step()
+        self._plan = self.scheduler.plan_step(self.block_log)
+        return self._plan
+
+    def compute(self, ctx, step_no: int) -> List[Request]:
+        """Run the planned step on device; returns finished requests."""
+        plan, self._plan = self._plan, None
+        assert plan is not None, "compute without plan"
+        finished: List[Request] = []
+        params, runtime = ctx.params, ctx.runtime
+
+        if plan.prefill is not None:
+            req = plan.prefill
+            toks = req.tokens_so_far
+            bucket = next_bucket(len(toks), self.max_seq)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :len(toks)] = toks
+            lengths = np.asarray([len(toks)], np.int32)
+            prefill_fn = ctx.prefill_fn(bucket)
+            last_logits, sub_cache = prefill_fn(
+                params, padded, lengths, runtime)
+            self.cache = write_slot(self.cache, sub_cache, req.batch_slot,
+                                    self.batch_axes)
+            tok = int(sample(np.asarray(last_logits), self.sampling,
+                             step=step_no)[0])
+            req.output_tokens.append(tok)
+            req.state = RequestState.RUNNING
+            self.last_token[req.batch_slot] = tok
+            if req.done:
+                self.scheduler.finish(req, self.block_log)
+                req.finish_time = time.monotonic()
+                finished.append(req)
+
+        if plan.decode:
+            tokens = np.asarray(self.last_token)
+            logits, new_cache = ctx.decode_fn(
+                params, self.cache, tokens, runtime)
+            self.cache = new_cache
+            logits = np.asarray(logits)
+            for req in plan.decode:
+                tok = int(sample(logits[req.batch_slot:req.batch_slot + 1],
+                                 self.sampling, step=step_no)[0])
+                req.output_tokens.append(tok)
+                self.last_token[req.batch_slot] = tok
+                if req.done or req.num_tokens >= self.max_seq:
+                    self.scheduler.finish(req, self.block_log)
+                    req.finish_time = time.monotonic()
+                    finished.append(req)
+        self.steps_done += 1
+        return finished
+
+    def commit(self) -> None:
+        """Step boundary reached: the undo log is no longer needed."""
+        self.block_log.begin_step()  # clears; committed counter advances
+
+    def rollback_inflight(self) -> int:
+        """§3.3: undo all block ops of the in-flight (uncommitted) step."""
+        n = self.block_log.undo_all(self.block_manager,
+                                    self.scheduler.block_tables)
+        # admissions from the aborted step (their allocs were all undone,
+        # leaving an empty block table) return to the waiting queue
+        aborted = [r for r in self.scheduler.running
+                   if self.scheduler.block_tables[r.req_id].num_blocks() == 0]
+        for r in aborted:
+            self.scheduler.running.remove(r)
+            del self.scheduler.block_tables[r.req_id]
+            if r.batch_slot is not None:
+                self.scheduler._free_slots.append(r.batch_slot)
+                r.batch_slot = None
+            r.state = RequestState.WAITING
+            self.scheduler.waiting.appendleft(r)
+        self._plan = None
+        return n

@@ -1,0 +1,81 @@
+"""Paged KV cache: physical block pools addressed through block tables.
+
+This is the device-side twin of the host-side block accounting in
+``repro.core.block_log``: the BlockManager/BlockTable decide *which*
+physical block a token lands in (all logged/undoable); this module owns
+the tensor pools and the attention over them.  The attention hot path is
+the Pallas ``paged_attention`` kernel (TPU) / its jnp oracle (CPU).
+
+Used by the TPU-native decode path and the paged-serving integration
+tests; the CPU engine's compiled path uses ring caches (DESIGN.md §2),
+with equivalence between the two proven in tests/test_paged_serving.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+class PagedKVCache:
+    """Per-layer K/V pools of shape (num_blocks, block_size, Hkv, Dh)."""
+
+    def __init__(self, cfg: ModelConfig, num_layers: int, num_blocks: int,
+                 block_size: int, dtype=jnp.float32):
+        Dh = cfg.resolved_head_dim()
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        shape = (num_layers, num_blocks, block_size, cfg.num_kv_heads, Dh)
+        self.k_pool = jnp.zeros(shape, dtype)
+        self.v_pool = jnp.zeros(shape, dtype)
+
+    def write_token(self, layer: int, block_id: int, offset: int,
+                    k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Write one token's K/V (Hkv, Dh) into (block, offset)."""
+        self.k_pool = self.k_pool.at[layer, block_id, offset].set(
+            k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[layer, block_id, offset].set(
+            v.astype(self.v_pool.dtype))
+
+    def write_prefill(self, layer: int, block_ids: List[int],
+                      k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Write a whole prompt's K/V (S, Hkv, Dh) into its blocks."""
+        S = k.shape[0]
+        bs = self.block_size
+        for j, bid in enumerate(block_ids):
+            lo = j * bs
+            if lo >= S:
+                break
+            hi = min(lo + bs, S)
+            self.k_pool = self.k_pool.at[layer, bid, : hi - lo].set(
+                k[lo:hi].astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[layer, bid, : hi - lo].set(
+                v[lo:hi].astype(self.v_pool.dtype))
+
+    def attend(self, layer: int, q: jnp.ndarray,
+               block_table: jnp.ndarray, seq_lens: jnp.ndarray,
+               use_pallas: bool = False) -> jnp.ndarray:
+        """Decode attention for one layer.
+
+        q: (B, H, Dh); block_table: (B, max_blk) int32; seq_lens: (B,).
+        use_pallas: run the Pallas kernel (interpret mode on CPU).
+        """
+        return ops.paged_attention(q, self.k_pool[layer],
+                                   self.v_pool[layer], block_table,
+                                   seq_lens, use_pallas=use_pallas)
+
+
+def table_array(tables: Dict[int, "BlockTable"], order: List[int],
+                max_blk: int) -> np.ndarray:
+    """Pack host-side block tables into the (B, max_blk) device array."""
+    out = np.zeros((len(order), max_blk), np.int32)
+    for i, seq_id in enumerate(order):
+        blocks = tables[seq_id].blocks
+        out[i, : len(blocks)] = blocks[:max_blk]
+    return out

@@ -1,0 +1,60 @@
+"""Request / sequence state machine for the serving engine."""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+    MIGRATING = "migrating"   # in flight between executors after a failure
+    FAILED = "failed"
+
+
+_req_counter = itertools.count(1)
+
+
+@dataclass
+class Request:
+    prompt_tokens: List[int]
+    max_new_tokens: int
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    state: RequestState = RequestState.WAITING
+    output_tokens: List[int] = field(default_factory=list)
+    arrival_time: float = field(default_factory=time.monotonic)
+    finish_time: Optional[float] = None
+    dp_rank: Optional[int] = None        # executor currently responsible
+    batch_slot: Optional[int] = None     # slot in the executor's decode batch
+    eos_token: Optional[int] = None
+    migrations: int = 0                  # how many times recovery moved us
+    recomputed_tokens: int = 0           # decode work redone due to recovery
+
+    @property
+    def tokens_so_far(self) -> List[int]:
+        return self.prompt_tokens + self.output_tokens
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.prompt_tokens) + len(self.output_tokens)
+
+    @property
+    def done(self) -> bool:
+        if len(self.output_tokens) >= self.max_new_tokens:
+            return True
+        return (self.eos_token is not None and self.output_tokens
+                and self.output_tokens[-1] == self.eos_token)
+
+    def rebuild_prompt_for_migration(self) -> "Request":
+        """§3.2 partial recomputation: prompt + decoded tokens become the
+        new prompt; the new executor re-prefills but skips completed
+        decoding steps (they stay in ``output_tokens`` accounting)."""
+        self.state = RequestState.MIGRATING
+        self.migrations += 1
+        self.dp_rank = None
+        self.batch_slot = None
+        return self

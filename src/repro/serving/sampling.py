@@ -1,0 +1,41 @@
+"""Token sampling: greedy / temperature / top-p, host-side."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0   # 0 = greedy
+    top_p: float = 1.0
+    seed: int = 0
+
+
+def sample(logits: np.ndarray, params: SamplingParams,
+           step: int = 0) -> np.ndarray:
+    """logits: (B, V) -> (B,) int32 token ids. Deterministic given seed+step."""
+    logits = np.asarray(logits, dtype=np.float64)
+    if params.temperature <= 0.0:
+        return np.argmax(logits, axis=-1).astype(np.int32)
+    rng = np.random.default_rng(params.seed * 1_000_003 + step)
+    z = logits / params.temperature
+    z = z - z.max(axis=-1, keepdims=True)
+    p = np.exp(z)
+    p /= p.sum(axis=-1, keepdims=True)
+    if params.top_p < 1.0:
+        order = np.argsort(-p, axis=-1)
+        sorted_p = np.take_along_axis(p, order, axis=-1)
+        csum = np.cumsum(sorted_p, axis=-1)
+        cut = csum - sorted_p > params.top_p
+        sorted_p[cut] = 0.0
+        sorted_p /= sorted_p.sum(axis=-1, keepdims=True)
+        out = np.empty(p.shape[0], np.int32)
+        for b in range(p.shape[0]):
+            out[b] = order[b, rng.choice(p.shape[1], p=sorted_p[b])]
+        return out
+    out = np.empty(p.shape[0], np.int32)
+    for b in range(p.shape[0]):
+        out[b] = rng.choice(p.shape[1], p=p[b])
+    return out.astype(np.int32)

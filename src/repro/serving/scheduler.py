@@ -1,0 +1,108 @@
+"""Continuous-batching local scheduler (one per DPExecutor).
+
+Decides, each generation step, which sequences prefill/decode, and drives
+all paged-KV block accounting through the (logged) BlockManager so that a
+mid-step failure can be rolled back exactly (§3.3).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.block_log import BlockLog, BlockManager, BlockTable
+from repro.serving.request import Request, RequestState
+
+
+@dataclass
+class StepPlan:
+    prefill: Optional[Request] = None
+    decode: List[Request] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return self.prefill is None and not self.decode
+
+
+class LocalScheduler:
+    def __init__(self, max_batch: int, max_seq: int,
+                 block_manager: BlockManager):
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.block_manager = block_manager
+        self.waiting: deque[Request] = deque()
+        self.running: List[Request] = []
+        self.block_tables: Dict[int, BlockTable] = {}
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+
+    # -- queue management -----------------------------------------------------
+
+    def add_request(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def drain(self) -> List[Request]:
+        """Remove and return every request (used for migration §3.2)."""
+        reqs = list(self.waiting) + list(self.running)
+        self.waiting.clear()
+        for r in list(self.running):
+            self._release(r, log=None)
+        self.running.clear()
+        return reqs
+
+    @property
+    def num_requests(self) -> int:
+        return len(self.waiting) + len(self.running)
+
+    # -- step planning ----------------------------------------------------------
+
+    def _blocks_needed(self, n_tokens: int) -> int:
+        bs = self.block_manager.block_size
+        return (n_tokens + bs - 1) // bs
+
+    def plan_step(self, log: BlockLog) -> StepPlan:
+        """Admit at most one prefill per step (vLLM-style), decode the rest.
+
+        All block allocations are recorded in ``log``.
+        """
+        plan = StepPlan()
+        # decode bookkeeping first: growing sequences may need a new block
+        for req in self.running:
+            if req.done:
+                continue
+            pos = req.num_tokens  # position the next token will occupy
+            table = self.block_tables[req.req_id]
+            if self._blocks_needed(pos + 1) > table.num_blocks():
+                bid = self.block_manager.allocate(log)
+                table.append_block(bid, log)
+            plan.decode.append(req)
+        # admission
+        if self.waiting and self._free_slots:
+            req = self.waiting[0]
+            need = self._blocks_needed(
+                min(req.num_tokens + 1, self.max_seq))
+            if self.block_manager.num_free >= need:
+                self.waiting.popleft()
+                table = BlockTable(req.req_id)
+                for _ in range(need):
+                    table.append_block(self.block_manager.allocate(log), log)
+                self.block_tables[req.req_id] = table
+                req.state = RequestState.RUNNING
+                req.batch_slot = self._free_slots.pop()
+                self.running.append(req)
+                plan.prefill = req
+        return plan
+
+    def finish(self, req: Request, log: Optional[BlockLog]) -> None:
+        req.state = RequestState.FINISHED
+        self._release(req, log)
+        self.running.remove(req)
+
+    def _release(self, req: Request, log: Optional[BlockLog]) -> None:
+        table = self.block_tables.pop(req.req_id, None)
+        if table is not None:
+            for bid in reversed(table.blocks):
+                self.block_manager.free(bid, log)
+        if req.batch_slot is not None:
+            self._free_slots.append(req.batch_slot)
+            req.batch_slot = None

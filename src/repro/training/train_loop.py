@@ -1,0 +1,59 @@
+"""Training loop: jitted train_step factory + a simple driver."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import (AdamWState, OptimizerConfig,
+                                      adamw_update, init_adamw)
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    runtime=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    The MoE runtime is threaded through so a degraded system (masked
+    experts after a recovery) can keep *serving-consistent* fine-tuning —
+    and so the dry-run sees the same routing data flow as serving.
+    """
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, runtime)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, batches, steps: int,
+          opt_cfg: Optional[OptimizerConfig] = None, seed: int = 0,
+          log_every: int = 50, params=None):
+    """Simple single-host training driver. Returns (params, history)."""
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=steps)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in zip(range(steps), batches):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+    return params, history

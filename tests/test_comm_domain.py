@@ -1,0 +1,54 @@
+"""Tests for §3.5 rank compaction and domain rebuild."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.comm_domain import CommDomain
+
+
+def test_compaction_closes_gap():
+    d = CommDomain(4, 4, collocated=False)
+    d.fail(5)  # moe rank with logical 1
+    rec = d.rebuild()
+    moe = d.group("moe")
+    ranks = sorted(r.logical_rank for r in moe)
+    assert ranks == [0, 1, 2]      # gap closed: ℓ_B=ℓ_A+1 -> ℓ_A
+    assert rec["world_size"] == 7
+    assert rec["version"] == 1
+
+
+def test_role_switch_takes_failed_logical_rank():
+    d = CommDomain(4, 4, collocated=False)
+    d.rebuild()
+    failed = d.device(6)           # moe logical rank 2
+    failed_logical = failed.logical_rank
+    d.fail(6)
+    rec = d.rebuild(role_switch_physical=1)   # dp rank 1 switches
+    switched = d.device(1)
+    assert switched.role == "moe"
+    assert switched.logical_rank == failed_logical
+    assert switched.alive
+    moe_ranks = sorted(r.logical_rank for r in d.group("moe"))
+    assert moe_ranks == [0, 1, 2, 3]
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 12), fails=st.lists(st.integers(0, 11), min_size=1,
+                                            max_size=4, unique=True))
+def test_compaction_always_contiguous(n, fails):
+    d = CommDomain(n, n, collocated=False)
+    for f in fails:
+        if f < n and sum(r.alive for r in d.group("attn")) > 1:
+            d.fail(f)
+    d.rebuild()
+    ranks = sorted(r.logical_rank for r in d.group("attn"))
+    assert ranks == list(range(len(ranks)))
+
+
+def test_collocated_domain_stages():
+    d = CommDomain(4, 0, collocated=True)
+    rec = d.rebuild()
+    assert "destroy_trampoline_domain" not in rec["stages"]
+    d2 = CommDomain(4, 4, collocated=False)
+    rec2 = d2.rebuild()
+    assert rec2["stages"][0] == "destroy_trampoline_domain"
+    assert rec2["stages"][-1] == "create_trampoline_domain"

@@ -1,0 +1,109 @@
+"""Property + unit tests for the §3.4 expert map and recovery planner."""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import MoEConfig
+from repro.core.expert_map import ExpertMap
+from repro.core.weights import (DenseFFNGroups, MoERecoveryKind,
+                                RecoveryPolicy, plan_moe_recovery)
+
+
+def mk_map(E=16, R=8, ep=4, k=2):
+    moe = MoEConfig(num_experts=E, top_k=k, expert_d_ff=64,
+                    num_redundant_experts=R)
+    return ExpertMap(moe, ep)
+
+
+@settings(max_examples=100, deadline=None)
+@given(E=st.sampled_from([8, 16, 32]),
+       ep=st.sampled_from([2, 4, 8]),
+       fail_rank=st.integers(0, 7))
+def test_runtime_consistency(E, ep, fail_rank):
+    """The runtime arrays always point at alive physical slots of the
+    right logical expert, and mask == (no replica or masked)."""
+    R = E // 2
+    if (E + R) % ep:
+        R = E            # make physical count divisible
+    emap = mk_map(E=E, R=R, ep=ep)
+    emap.fail_rank(fail_rank % ep)
+    rt = emap.runtime()
+    l2p = np.asarray(rt.logical_to_physical)
+    count = np.asarray(rt.replica_count)
+    mask = np.asarray(rt.expert_mask)
+    for e in range(E):
+        for i in range(count[e]):
+            slot = l2p[e, i]
+            assert emap.slot_alive[slot]
+            assert emap.slot_logical[slot] == e
+        assert mask[e] == (count[e] > 0 and e not in emap.masked)
+
+
+def test_fail_rank_then_redundant_coverage():
+    # every expert replicated once: any single rank failure is covered
+    emap = mk_map(E=8, R=8, ep=4)
+    emap.fail_rank(1)
+    assert emap.fully_lost() == []
+    assert emap.coverage() == 1.0
+    plan = plan_moe_recovery(emap, RecoveryPolicy(), donor_rank=None)
+    assert plan.kind is MoERecoveryKind.REDUNDANT_EXPERTS
+
+
+def test_unreplicated_loss_routes_to_role_switch_then_missing():
+    emap = mk_map(E=16, R=0, ep=4)
+    lost = emap.fail_rank(2)
+    assert lost == [8, 9, 10, 11]
+    assert set(emap.fully_lost()) == {8, 9, 10, 11}
+    plan = plan_moe_recovery(emap, RecoveryPolicy(), donor_rank=1)
+    assert plan.kind is MoERecoveryKind.ROLE_SWITCH
+    assert plan.donor_rank == 1
+    # no donor available -> missing experts (with EP warning below 32)
+    plan2 = plan_moe_recovery(emap, RecoveryPolicy(), donor_rank=None)
+    assert plan2.kind is MoERecoveryKind.MISSING_EXPERTS
+    assert plan2.accuracy_warning  # ep=4 < 32 (§4.2 threshold)
+
+
+def test_role_switch_install_restores_coverage():
+    emap = mk_map(E=16, R=0, ep=4)
+    emap.fail_rank(2)
+    assert emap.coverage() < 1.0
+    restored = emap.install_rank(2)
+    assert sorted(restored) == [8, 9, 10, 11]
+    assert emap.coverage() == 1.0
+    rt = emap.runtime()
+    assert bool(np.all(np.asarray(rt.expert_mask)))
+
+
+def test_mask_experts_reflects_in_runtime():
+    emap = mk_map()
+    emap.fail_rank(0)
+    lost = emap.fully_lost()
+    emap.mask_experts(lost)
+    rt = emap.runtime()
+    mask = np.asarray(rt.expert_mask)
+    for e in lost:
+        assert not mask[e]
+
+
+def test_losing_last_replica_of_redundant_expert():
+    """§4.3: redundancy is by usage, so the last copy can still die."""
+    emap = mk_map(E=8, R=4, ep=4)  # slots: 0-7 base, 8-11 replicas of 0-3
+    # rank 0 holds slots 0-2 (logicals 0,1,2); replicas of 0,1,2 exist
+    emap.fail_rank(0)
+    assert emap.fully_lost() == []
+    # rank 2 holds slots 6,7,8 -> logicals 6,7 (unreplicated) AND the
+    # replica of 0 — whose base copy already died with rank 0: even a
+    # redundant expert is lost once its last copy goes (§4.3)
+    emap.fail_rank(2)
+    assert set(emap.fully_lost()) == {0, 6, 7}
+
+
+def test_dense_ffn_group_rebalance():
+    g = DenseFFNGroups(4)
+    assert g.routing_weights() == [0.25] * 4
+    g.fail_shard(1)
+    w = g.routing_weights()
+    assert w[1] == 0.0 and abs(sum(w) - 1.0) < 1e-9
+    assert all(abs(x - 1 / 3) < 1e-9 for i, x in enumerate(w) if i != 1)
