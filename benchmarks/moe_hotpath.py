@@ -1,0 +1,135 @@
+"""MoE steady-state hot-path benchmark: dense-scatter vs fused pipeline.
+
+ReviveMoE's recovery races against the per-step MoE latency (§3.4 keeps
+the compiled MoE graph alive across failures precisely so the steady
+state stays fast), so this benchmark tracks the one number every future
+kernel PR has to beat: time per MoE layer application for decode- and
+prefill-shaped batches.
+
+Two implementations of the identical routing semantics are timed:
+
+  * ``dense``  — ``moe.dispatch_compute_combine``: argsort + scatter into
+    an (E, cap, D) capacity buffer, batched einsum FFN, gather + unsort.
+  * ``fused``  — ``ops.moe_dispatch_ffn_combine``: one sort pass to slot
+    tables, then gather -> grouped SwiGLU -> scatter-combine in a single
+    kernel (Pallas on TPU; the gather-first jnp fallback on CPU).
+
+Results append to ``BENCH_moe_hotpath.json`` at the repo root —
+machine-readable so later PRs diff against the trajectory.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(ROOT, "BENCH_moe_hotpath.json")
+
+# (name, kind, T, E_local, top_k, D, F) — CPU-sized; on TPU scale these
+# up to serving shapes (decode_32k: T=128, kimi: E=384/ep, D=7168).
+SWEEP = [
+    ("decode_b8", "decode", 8, 8, 2, 256, 512),
+    ("decode_b32", "decode", 32, 16, 2, 256, 512),
+    ("decode_b128", "decode", 128, 32, 4, 256, 512),
+    ("prefill_1k", "prefill", 1024, 8, 2, 256, 512),
+    ("prefill_2k", "prefill", 2048, 16, 2, 256, 512),
+]
+
+
+def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False, use_pallas: bool = None) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.models.moe import capacity, dispatch_compute_combine
+
+    if use_pallas is None:
+        # interpret-mode Pallas is a correctness tool, not a benchmark;
+        # CPU numbers compare the two jnp formulations instead
+        use_pallas = jax.default_backend() not in ("cpu",)
+
+    sweep = SWEEP[:3] if quick else SWEEP
+    dense = jax.jit(dispatch_compute_combine,
+                    static_argnames=("cap", "e_local"))
+    rows = []
+    for name, kind, T, E, k, D, F in sweep:
+        ks = jax.random.split(jax.random.fold_in(
+            jax.random.PRNGKey(7), T * E), 7)
+        x = jax.random.normal(ks[0], (T, D)) * 0.1
+        g = jax.random.normal(ks[1], (E, D, F)) * 0.05
+        u = jax.random.normal(ks[2], (E, D, F)) * 0.05
+        d = jax.random.normal(ks[3], (E, F, D)) * 0.05
+        phys = jax.random.randint(ks[4], (T, k), 0, E)
+        w = jax.nn.softmax(jax.random.normal(ks[5], (T, k)), -1)
+        alive = jnp.ones((T, k), bool)
+        cap = capacity(T * k, E, 1.25)
+        off = jnp.int32(0)
+
+        t_dense = _time_fn(
+            lambda: dense(x, w, phys, alive, g, u, d, cap=cap,
+                          expert_offset=off, e_local=E))
+        t_fused = _time_fn(
+            lambda: ops.moe_dispatch_ffn_combine(
+                x, g, u, d, w, phys, alive, off, cap=cap, e_local=E,
+                use_pallas=use_pallas))
+        rows.append({
+            "name": name, "kind": kind, "T": T, "E": E, "top_k": k,
+            "D": D, "F": F, "cap": cap,
+            "dense_us": t_dense * 1e6, "fused_us": t_fused * 1e6,
+            "speedup": t_dense / max(t_fused, 1e-12),
+            "backend": jax.default_backend(), "use_pallas": use_pallas,
+        })
+    return rows
+
+
+def print_table(rows: List[Dict]) -> None:
+    impl = "pallas" if rows and rows[0]["use_pallas"] else "jnp fallback"
+    print(f"\n# MoE hot path: dense-scatter vs fused ({impl}, "
+          f"backend={rows[0]['backend'] if rows else '?'})")
+    print(f"{'shape':12s} {'kind':8s} {'T':>6s} {'E':>4s} {'k':>3s} "
+          f"{'cap':>5s} {'dense us':>10s} {'fused us':>10s} {'speedup':>8s}")
+    for r in rows:
+        print(f"{r['name']:12s} {r['kind']:8s} {r['T']:6d} {r['E']:4d} "
+              f"{r['top_k']:3d} {r['cap']:5d} {r['dense_us']:10.0f} "
+              f"{r['fused_us']:10.0f} {r['speedup']:7.2f}x")
+
+
+def save_json(rows: List[Dict], path: str = BENCH_PATH, *,
+              quick: bool = False) -> None:
+    """Append this run to the perf trajectory (list of run records).
+
+    ``quick`` is recorded so reduced sweeps are never mistaken for the
+    full-sweep records future PRs must beat.
+    """
+    from benchmarks.trajectory import append_record
+    append_record(path, {
+        "benchmark": "moe_hotpath",
+        "unix_time": time.time(),
+        "quick": quick,
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pallas", action="store_true",
+                    help="force the Pallas kernel (interpret mode on CPU)")
+    args = ap.parse_args()
+    rs = run(quick=args.quick, use_pallas=True if args.pallas else None)
+    print_table(rs)
+    save_json(rs, quick=args.quick)
+    print(f"\nappended to {BENCH_PATH}")

@@ -1,15 +1,28 @@
 """Benchmark entrypoint: one benchmark per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                          [--json PATH]
 
 Prints human tables plus a machine-readable ``name,us_per_call,derived``
-CSV summary at the end.
+CSV summary at the end.  ``--json PATH`` additionally appends the same
+summary rows to PATH (a JSON list of run records), so every benchmark —
+not just moe_hotpath — feeds the BENCH_* perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def append_json(path: str, rows) -> None:
+    """Append one run record to a BENCH-style JSON trajectory file."""
+    from benchmarks.trajectory import append_record
+    append_record(path, {
+        "unix_time": time.time(),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    })
 
 
 def main(argv=None) -> int:
@@ -19,12 +32,25 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     choices=[None, "recovery", "lost_experts",
                              "compile_cache", "reinit", "roofline",
-                             "slo"])
+                             "slo", "moe_hotpath"])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append the CSV-summary rows to PATH as JSON")
     args = ap.parse_args(argv)
     csv_rows = [("name", "us_per_call", "derived")]
 
     def want(name):
         return args.only in (None, name)
+
+    if want("moe_hotpath"):
+        from benchmarks import moe_hotpath
+        rows = moe_hotpath.run(quick=args.quick)
+        moe_hotpath.print_table(rows)
+        moe_hotpath.save_json(rows, quick=args.quick)
+        for r in rows:
+            csv_rows.append((f"moe_hotpath_{r['name']}_fused",
+                             f"{r['fused_us']:.0f}",
+                             f"dense_us={r['dense_us']:.0f},"
+                             f"speedup={r['speedup']:.2f}x"))
 
     if want("reinit"):
         from benchmarks import reinit_breakdown
@@ -95,6 +121,9 @@ def main(argv=None) -> int:
     print("\n# CSV summary")
     for row in csv_rows:
         print(",".join(str(x) for x in row))
+    if args.json:
+        append_json(args.json, csv_rows[1:])
+        print(f"\nappended {len(csv_rows) - 1} rows to {args.json}")
     return 0
 
 

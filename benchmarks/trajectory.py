@@ -1,0 +1,29 @@
+"""Shared helper for BENCH-style JSON perf-trajectory files.
+
+A trajectory file is a JSON list of run records; every benchmark that
+appends to one goes through :func:`append_record` so the on-disk shape
+stays uniform across writers.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+
+def append_record(path: str, record: Dict) -> None:
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                trajectory = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            # a previously interrupted write left a truncated file; keep
+            # it for forensics and start a fresh trajectory
+            os.replace(path, path + ".corrupt")
+            trajectory = []
+    trajectory.append(record)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trajectory, f, indent=1)
+    os.replace(tmp, path)    # atomic: no torn trajectory on interrupt

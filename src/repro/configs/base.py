@@ -100,13 +100,26 @@ class ModelConfig:
     tie_embeddings: bool = False
 
     # runtime knobs (overridden per input-shape / perf experiment)
-    moe_impl: str = "gather_psum"  # gather_psum | a2a  (see DESIGN.md §6)
+    # MoE execution: 'gather_psum' | 'a2a' pick the distributed
+    # dispatch/combine (DESIGN.md §6); a '_fused' suffix (or plain
+    # 'fused' for single-rank) additionally routes the local expert
+    # compute through the fused Pallas dispatch->FFN->combine kernel
+    # instead of the dense-scatter capacity buffer.
+    moe_impl: str = "gather_psum"
     remat: bool = False
     scan_layers: bool = True
     # decode-cache update strategy: False = cache flows as scan xs/ys
     # (copies the whole cache each step); True = cache is a scan carry
     # updated with in-place dynamic_update_slice (aliasable — §Perf A4)
     decode_cache_carry: bool = False
+
+    MOE_IMPLS = ("gather_psum", "a2a", "fused", "gather_psum_fused",
+                 "a2a_fused")
+
+    @property
+    def moe_fused(self) -> bool:
+        """True when local expert compute uses the fused Pallas pipeline."""
+        return self.moe_impl == "fused" or self.moe_impl.endswith("_fused")
 
     def resolved_head_dim(self) -> int:
         if self.head_dim:
@@ -128,6 +141,7 @@ class ModelConfig:
 
     def validate(self) -> None:
         assert self.family in ("dense", "moe", "hybrid", "ssm", "audio", "vlm")
+        assert self.moe_impl in self.MOE_IMPLS, self.moe_impl
         assert self.attention_type in ("gqa", "mla", "none")
         if self.attention_type == "mla":
             assert self.mla is not None

@@ -26,9 +26,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.moe import (MoERuntime, dispatch_compute_combine,
-                              experts_compute, physical_experts, route,
-                              select_replicas)
+from repro.models.moe import (MoERuntime, dispatch_compute_combine_fused,
+                              dispatch_fn, experts_compute, group_by_expert,
+                              physical_experts, route, select_replicas)
 
 try:
     from jax.experimental.shard_map import shard_map
@@ -110,7 +110,7 @@ class MoEDist:
                                             tiled=True)
                 weights, sel, aux = route(router_w, xg, rt, moe)
                 phys, alive = select_replicas(sel, rt)
-                y = dispatch_compute_combine(
+                y = dispatch_fn(cfg)(
                     xg, weights, phys, alive, gate_w, up_w, down_w,
                     cap=cap, expert_offset=offset, e_local=e_local)
                 # combine: expert-slot partials over EP, FFN-dim partials
@@ -183,14 +183,8 @@ class MoEDistA2A(MoEDist):
             phys, alive = select_replicas(sel, rt)            # (T, k)
             dest = phys // e_local                            # owner rank
             N = T * k
-            flat_dest = jnp.where(alive.reshape(N), dest.reshape(N), ep)
-            order = jnp.argsort(flat_dest, stable=True)
-            sorted_dest = flat_dest[order]
-            first = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
-            pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
-            keep = (sorted_dest < ep) & (pos < cap)
-            s_dest = jnp.where(keep, sorted_dest, ep)
-            s_pos = jnp.where(keep, pos, cap)
+            order, s_dest, s_pos = group_by_expert(
+                dest.reshape(N), alive.reshape(N), ep, cap)
             tok = jnp.arange(N, dtype=jnp.int32) // k
 
             send = jnp.zeros((ep, cap, D), x_loc.dtype)
@@ -206,25 +200,29 @@ class MoEDistA2A(MoEDist):
             rt_e = recv_e.reshape(ep * cap) - my_rank * e_local
             rt_ok = (rt_e >= 0) & (rt_e < e_local)
 
-            order2 = jnp.argsort(jnp.where(rt_ok, rt_e, e_local),
-                                 stable=True)
-            se = jnp.where(rt_ok, rt_e, e_local)[order2]
-            first2 = jnp.searchsorted(se, se, side="left")
-            pos2 = jnp.arange(ep * cap, dtype=jnp.int32) - first2.astype(
-                jnp.int32)
             cap2 = min(ep * cap, max(8, int(
                 moe.capacity_factor * ep * cap / max(e_local, 1))))
-            keep2 = (se < e_local) & (pos2 < cap2)
-            d_e = jnp.where(keep2, se, e_local)
-            d_p = jnp.where(keep2, pos2, cap2)
-            buf = jnp.zeros((e_local, cap2, D), x_loc.dtype)
-            buf = buf.at[d_e, d_p].set(rt_tokens[order2], mode="drop")
-            out_buf = experts_compute(gate_w, up_w, down_w, buf)
-            # FFN-dim partials combine over the expert-TP axis
-            out_buf = jax.lax.psum(out_buf, tp_axis)
-            y_sorted = out_buf.at[d_e, d_p].get(mode="fill", fill_value=0.0)
-            y_recv = jnp.zeros((ep * cap, D), x_loc.dtype).at[order2].set(
-                y_sorted)
+            if cfg.moe_fused:
+                # the fused kernel re-derives the grouping from its own
+                # sort pass; received tokens act as top-1 routed tokens
+                y_recv = dispatch_compute_combine_fused(
+                    rt_tokens, jnp.ones((ep * cap, 1), jnp.float32),
+                    rt_e[:, None], rt_ok[:, None], gate_w, up_w, down_w,
+                    cap=cap2, expert_offset=0, e_local=e_local)
+                # FFN-dim partials combine over the expert-TP axis
+                y_recv = jax.lax.psum(y_recv, tp_axis).astype(x_loc.dtype)
+            else:
+                order2, d_e, d_p = group_by_expert(rt_e, rt_ok, e_local,
+                                                   cap2)
+                buf = jnp.zeros((e_local, cap2, D), x_loc.dtype)
+                buf = buf.at[d_e, d_p].set(rt_tokens[order2], mode="drop")
+                out_buf = experts_compute(gate_w, up_w, down_w, buf)
+                # FFN-dim partials combine over the expert-TP axis
+                out_buf = jax.lax.psum(out_buf, tp_axis)
+                y_sorted = out_buf.at[d_e, d_p].get(mode="fill",
+                                                    fill_value=0.0)
+                y_recv = jnp.zeros((ep * cap, D), x_loc.dtype).at[
+                    order2].set(y_sorted)
 
             # E2A: expert outputs travel home
             back = jax.lax.all_to_all(y_recv.reshape(ep, cap, D),
@@ -255,5 +253,9 @@ class MoEDistA2A(MoEDist):
 
 
 def make_moe_dist(mesh, impl: str, dp_axes=("data",), ep_axis="model"):
-    cls = {"gather_psum": MoEDist, "a2a": MoEDistA2A}[impl]
+    """impl may be any ``ModelConfig.MOE_IMPLS`` value; the '_fused'
+    suffix only changes the *local* compute (selected via cfg at apply
+    time), so both suffixed names map onto the same dist class."""
+    base = "a2a" if impl.startswith("a2a") else "gather_psum"
+    cls = {"gather_psum": MoEDist, "a2a": MoEDistA2A}[base]
     return cls(mesh, dp_axes, ep_axis)

@@ -1,0 +1,17 @@
+"""Version-compat shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; every kernel goes through :func:`tpu_compiler_params`
+so the repo compiles against either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build compiler params portably (e.g. ``dimension_semantics=...``)."""
+    return _CompilerParams(**kwargs)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.expert_ffn import expert_ffn_pallas
+from repro.kernels.moe_fused import moe_fused_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.router_topk import router_topk_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
@@ -35,6 +36,28 @@ def expert_ffn(x, gate_w, up_w, down_w, use_pallas: bool = True):
     if not use_pallas:
         return ref.expert_ffn_ref(x, gate_w, up_w, down_w)
     return expert_ffn_pallas(x, gate_w, up_w, down_w, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "e_local", "use_pallas"))
+def moe_dispatch_ffn_combine(x, gate_w, up_w, down_w, weights, phys, alive,
+                             expert_offset, *, cap: int, e_local: int,
+                             use_pallas: bool = True):
+    """Fused MoE dispatch -> grouped SwiGLU FFN -> weighted combine.
+
+    ``expert_offset`` is a *traced* operand (EP rank × e_local inside
+    shard_map) and the MoERuntime-derived phys/alive/weights are data, so
+    recovery mutations never retrigger compilation.  ``use_pallas=False``
+    selects the jnp fallback (the serving engine's CPU path).
+    """
+    if not use_pallas:
+        return ref.moe_fused_ref(x, gate_w, up_w, down_w, weights, phys,
+                                 alive, cap=cap,
+                                 expert_offset=expert_offset,
+                                 e_local=e_local)
+    return moe_fused_pallas(x, gate_w, up_w, down_w, weights, phys, alive,
+                            cap=cap, expert_offset=expert_offset,
+                            e_local=e_local, interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

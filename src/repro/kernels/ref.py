@@ -40,6 +40,30 @@ def expert_ffn_ref(x, gate_w, up_w, down_w):
     return y.astype(x.dtype)
 
 
+def moe_fused_ref(x, gate_w, up_w, down_w, weights, phys, alive, *,
+                  cap: int, expert_offset=0, e_local: int):
+    """Fused MoE dispatch->grouped FFN->combine oracle.
+
+    Same routing/drop semantics as ``moe.dispatch_compute_combine`` (the
+    dense-scatter path), expressed gather-first: one sort pass builds
+    (E_local, cap) slot tables, tokens are *gathered* into the capacity
+    layout, and expert outputs *scatter-add* straight into y — no (N, D)
+    unsort pass.  This is also the CPU fallback of the fused pipeline.
+    x: (T, D) -> y (T, D).
+    """
+    from repro.kernels.moe_fused import moe_group_tokens
+    T, D = x.shape
+    tok_idx, wgt = moe_group_tokens(
+        phys, alive, weights, expert_offset=expert_offset,
+        e_local=e_local, cap=cap)
+    xe = x[tok_idx] * (wgt != 0.0)[..., None].astype(x.dtype)  # (E, cap, D)
+    out = expert_ffn_ref(xe, gate_w, up_w, down_w)
+    y = jnp.zeros((T, D), x.dtype).at[tok_idx.reshape(-1)].add(
+        (wgt[..., None].astype(jnp.float32) * out).reshape(-1, D).astype(
+            x.dtype))
+    return y
+
+
 def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens):
     """Paged GQA decode attention oracle.
 

@@ -285,6 +285,10 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     shape = INPUT_SHAPES[shape_name]
     import dataclasses
     cfg = dataclasses.replace(cfg, remat=(shape.kind == "train"))
+    if cfg.moe is not None:
+        # thread the impl into the config so a '_fused' choice also
+        # selects the fused local compute inside shard_map
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     cfg = apply_cfg_patch(cfg, cfg_patch)
     global _FORCE_ATTN_TP, _DONATE
     _FORCE_ATTN_TP = force_attn_tp
@@ -388,7 +392,8 @@ def main(argv=None):
     ap.add_argument("--shape", choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--moe-impl", default="gather_psum",
-                    choices=["gather_psum", "a2a"])
+                    choices=["gather_psum", "a2a", "gather_psum_fused",
+                             "a2a_fused"])
     ap.add_argument("--out", default=None, help="write JSON record here")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--no-extrapolate", action="store_true",

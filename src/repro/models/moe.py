@@ -18,6 +18,11 @@ Design (DESIGN.md §6, §1.4):
   An explicit all-to-all variant (A2E/E2A analogue) lives in
   ``repro.distributed.collectives`` and is selected with
   ``cfg.moe_impl='a2a'``.
+* The local dispatch->FFN->combine has two implementations with
+  identical semantics: :func:`dispatch_compute_combine` (dense-scatter
+  capacity buffer) and :func:`dispatch_compute_combine_fused` (the
+  fused Pallas pipeline in ``repro.kernels.moe_fused``), selected by a
+  'fused' suffix on ``cfg.moe_impl``.
 """
 from __future__ import annotations
 
@@ -131,6 +136,30 @@ def capacity(tokens_times_k: int, e_phys: int, cf: float,
     return max(floor, min(tokens_times_k, c))
 
 
+def group_by_expert(ids, ok, n_groups: int, cap: int):
+    """The single sort pass shared by every dispatch implementation.
+
+    ids: (N,) int32 group ids; ok: (N,) bool validity.  Returns
+    (order, group, slot): ``order`` sorts the flat copies by group id
+    (invalid entries last), ``group``/``slot`` are each sorted element's
+    scatter coordinates, with invalid and over-capacity elements mapped
+    out of bounds to (n_groups, cap) so ``mode='drop'`` scatters drop
+    them.  Drop semantics live here and nowhere else — the dense path,
+    the fused kernel's slot tables, and the A2A send/receive legs all
+    consume this helper.
+    """
+    N = ids.shape[0]
+    key = jnp.where(ok, ids, n_groups)           # dropped sort last
+    order = jnp.argsort(key, stable=True)
+    sorted_k = key[order]
+    first = jnp.searchsorted(sorted_k, sorted_k, side="left")
+    pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (sorted_k < n_groups) & (pos < cap)
+    group = jnp.where(keep, sorted_k, n_groups)
+    slot = jnp.where(keep, pos, cap)
+    return order, group, slot
+
+
 def experts_compute(gate_w, up_w, down_w, buf):
     """Batched expert FFN. buf: (E_local, C, D) -> (E_local, C, D)."""
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate_w))
@@ -156,17 +185,7 @@ def dispatch_compute_combine(x_flat, weights, phys, alive,
     e_id = phys.reshape(N) - expert_offset
     ok = (e_id >= 0) & (e_id < e_local) & alive.reshape(N)
     tok = jnp.arange(N, dtype=jnp.int32) // k
-
-    # stable sort by expert id; position within expert = rank - first rank
-    e_sort_key = jnp.where(ok, e_id, e_local)  # dropped tokens sort last
-    order = jnp.argsort(e_sort_key, stable=True)
-    sorted_e = e_sort_key[order]
-    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
-    pos = jnp.arange(N, dtype=jnp.int32) - first.astype(jnp.int32)
-    keep = (sorted_e < e_local) & (pos < cap)
-    # out-of-capacity / foreign tokens scatter out of bounds -> dropped
-    scatter_e = jnp.where(keep, sorted_e, e_local)
-    scatter_p = jnp.where(keep, pos, cap)
+    order, scatter_e, scatter_p = group_by_expert(e_id, ok, e_local, cap)
 
     buf = jnp.zeros((e_local, cap, D), x_flat.dtype)
     buf = buf.at[scatter_e, scatter_p].set(
@@ -182,20 +201,54 @@ def dispatch_compute_combine(x_flat, weights, phys, alive,
     return y
 
 
+def use_pallas_default() -> bool:
+    """Pallas kernels compile natively on TPU; on CPU the jnp fallback is
+    the fast path (interpret mode is for parity tests only)."""
+    return jax.default_backend() not in ("cpu",)
+
+
+def dispatch_compute_combine_fused(x_flat, weights, phys, alive,
+                                   gate_w, up_w, down_w, *,
+                                   cap: int, expert_offset, e_local: int,
+                                   use_pallas: Optional[bool] = None):
+    """Fused-pipeline twin of :func:`dispatch_compute_combine`.
+
+    One sort pass groups tokens per expert; gather -> grouped SwiGLU FFN
+    -> weighted scatter-combine run in a single Pallas kernel (see
+    ``repro.kernels.moe_fused``), skipping the dense (E_local, cap, D)
+    HBM capacity buffer and the (N, D) unsort of the dense path.
+    """
+    from repro.kernels import ops
+    if use_pallas is None:
+        use_pallas = use_pallas_default()
+    return ops.moe_dispatch_ffn_combine(
+        x_flat, gate_w, up_w, down_w, weights, phys, alive,
+        jnp.asarray(expert_offset, jnp.int32),
+        cap=cap, e_local=e_local, use_pallas=use_pallas)
+
+
+def dispatch_fn(cfg: ModelConfig):
+    """Local dispatch->FFN->combine implementation selected by
+    ``cfg.moe_impl``: dense-scatter or the fused Pallas pipeline."""
+    return (dispatch_compute_combine_fused if cfg.moe_fused
+            else dispatch_compute_combine)
+
+
 def moe_apply_local(p, cfg: ModelConfig, x_flat, runtime: MoERuntime, *,
                     cap: int, expert_offset=0, e_local: Optional[int] = None):
     """Single-rank MoE application over local expert slots.
 
     Shared experts and the router run on the caller side (replicated /
     TP-sharded by GSPMD); this function is what runs inside shard_map for
-    the distributed path.
+    the distributed path.  ``cfg.moe_impl`` endings in 'fused' route the
+    dispatch->FFN->combine through the fused Pallas pipeline.
     Returns (y (T,D), aux_loss scalar).
     """
     moe = cfg.moe
     e_local = e_local if e_local is not None else physical_experts(moe)
     weights, sel, aux = route(p["router"], x_flat, runtime, moe)
     phys, alive = select_replicas(sel, runtime)
-    y = dispatch_compute_combine(
+    y = dispatch_fn(cfg)(
         x_flat, weights, phys, alive, p["gate"], p["up"], p["down"],
         cap=cap, expert_offset=expert_offset, e_local=e_local)
     return y, aux

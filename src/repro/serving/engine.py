@@ -105,12 +105,19 @@ class EngineConfig:
     precompile_failure_scenarios: bool = True
     persist_cache_dir: Optional[str] = None
     heartbeat_timeout_steps: int = 2
+    # override ModelConfig.moe_impl (e.g. 'fused' routes the MoE layer
+    # through the fused Pallas dispatch->FFN->combine pipeline); None
+    # keeps the model config's choice
+    moe_impl: Optional[str] = None
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = None):
-        self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
+        if self.ecfg.moe_impl is not None and cfg.moe is not None:
+            import dataclasses
+            cfg = dataclasses.replace(cfg, moe_impl=self.ecfg.moe_impl)
+        self.cfg = cfg
         assert self.ecfg.mode in ("collocated", "disaggregated")
         if cfg.moe is None:
             # dense model: no expert ranks; disaggregated degenerates

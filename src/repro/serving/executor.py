@@ -151,9 +151,13 @@ class DPExecutor:
                 params, self.cache, tokens, runtime)
             self.cache = new_cache
             logits = np.asarray(logits)
-            for req in plan.decode:
-                tok = int(sample(logits[req.batch_slot:req.batch_slot + 1],
-                                 self.sampling, step=step_no)[0])
+            # one batched sample over the whole decode batch (the
+            # per-request loop serialized B host round trips per step)
+            slots = np.fromiter((r.batch_slot for r in plan.decode),
+                                np.intp, count=len(plan.decode))
+            toks = sample(logits[slots], self.sampling, step=step_no)
+            for req, tok in zip(plan.decode, toks):
+                tok = int(tok)
                 req.output_tokens.append(tok)
                 self.last_token[req.batch_slot] = tok
                 if req.done or req.num_tokens >= self.max_seq:

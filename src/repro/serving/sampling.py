@@ -15,27 +15,33 @@ class SamplingParams:
 
 def sample(logits: np.ndarray, params: SamplingParams,
            step: int = 0) -> np.ndarray:
-    """logits: (B, V) -> (B,) int32 token ids. Deterministic given seed+step."""
+    """logits: (B, V) -> (B,) int32 token ids.
+
+    Deterministic given (seed, step) *per row*: every row shares the one
+    uniform drawn for this step, so a request's token depends only on
+    its own logits — not on its batch slot or on which other requests
+    happen to be decoding this step.  Recovery replays (a surviving
+    request re-stepping after a migration changed the batch) therefore
+    reproduce the originally emitted tokens.
+    """
     logits = np.asarray(logits, dtype=np.float64)
     if params.temperature <= 0.0:
         return np.argmax(logits, axis=-1).astype(np.int32)
     rng = np.random.default_rng(params.seed * 1_000_003 + step)
+    u = rng.random()
     z = logits / params.temperature
     z = z - z.max(axis=-1, keepdims=True)
     p = np.exp(z)
     p /= p.sum(axis=-1, keepdims=True)
+    order = np.argsort(-p, axis=-1)
+    sorted_p = np.take_along_axis(p, order, axis=-1)
     if params.top_p < 1.0:
-        order = np.argsort(-p, axis=-1)
-        sorted_p = np.take_along_axis(p, order, axis=-1)
         csum = np.cumsum(sorted_p, axis=-1)
         cut = csum - sorted_p > params.top_p
         sorted_p[cut] = 0.0
         sorted_p /= sorted_p.sum(axis=-1, keepdims=True)
-        out = np.empty(p.shape[0], np.int32)
-        for b in range(p.shape[0]):
-            out[b] = order[b, rng.choice(p.shape[1], p=sorted_p[b])]
-        return out
-    out = np.empty(p.shape[0], np.int32)
-    for b in range(p.shape[0]):
-        out[b] = rng.choice(p.shape[1], p=p[b])
-    return out.astype(np.int32)
+    # shared-u inverse CDF over the sorted distribution, vectorized
+    cdf = np.cumsum(sorted_p, axis=-1)
+    idx = np.minimum((cdf < u).sum(axis=-1), logits.shape[-1] - 1)
+    return np.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
+        np.int32)

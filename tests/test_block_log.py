@@ -6,6 +6,10 @@ exactly — the core ARIES-style guarantee ReviveMoE relies on.
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,4 +1,8 @@
 """Tests for §3.5 rank compaction and domain rebuild."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

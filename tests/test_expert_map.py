@@ -1,8 +1,12 @@
 """Property + unit tests for the §3.4 expert map and recovery planner."""
 from __future__ import annotations
 
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs.base import MoEConfig

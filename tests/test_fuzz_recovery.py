@@ -17,6 +17,9 @@ import dataclasses
 import numpy as np
 import pytest
 
+# randomized end-to-end engine runs: tier-2 only
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_smoke_config
 from repro.core.fault_codes import ErrorType, Severity
 from repro.core.weights import RecoveryPolicy

@@ -64,6 +64,7 @@ def test_attention_failure_migrates_and_finishes(disagg, tmp_path):
         assert len(r.output_tokens) == r.max_new_tokens
 
 
+@pytest.mark.slow
 def test_moe_failure_role_switch(disagg, tmp_path):
     cfg, ec = disagg
     ec = dataclasses.replace(ec, workdir=str(tmp_path))
@@ -104,6 +105,7 @@ def test_moe_failure_missing_experts_masks_routing(tmp_path):
     # inference continued: the engine serves with the degraded expert set
 
 
+@pytest.mark.slow
 def test_collocated_failure_runs_both_paths(tmp_path):
     cfg = small_moe_cfg(redundant=4, experts=4)  # fully replicated
     ec = EngineConfig(mode="collocated", num_dp=2, max_batch=2, max_seq=64,
@@ -121,6 +123,7 @@ def test_collocated_failure_runs_both_paths(tmp_path):
     assert rep.moe_plan.kind is MoERecoveryKind.REDUNDANT_EXPERTS
 
 
+@pytest.mark.slow
 def test_benign_fault_is_ignored(tmp_path):
     cfg = small_moe_cfg()
     ec = EngineConfig(mode="collocated", num_dp=2, max_batch=2, max_seq=64,
@@ -137,6 +140,7 @@ def test_benign_fault_is_ignored(tmp_path):
     assert not reps
 
 
+@pytest.mark.slow
 def test_block_log_rolls_back_on_mid_step_failure(tmp_path):
     cfg = small_moe_cfg()
     ec = EngineConfig(mode="collocated", num_dp=2, max_batch=2, max_seq=64,
@@ -156,6 +160,7 @@ def test_block_log_rolls_back_on_mid_step_failure(tmp_path):
     assert survivor.block_manager.num_allocated == 0  # all finished+freed
 
 
+@pytest.mark.slow
 def test_heartbeat_detection_path(tmp_path):
     """A device that dies silently (no annotation) is caught by the
     heartbeat monitor after timeout_steps."""
@@ -176,6 +181,7 @@ def test_heartbeat_detection_path(tmp_path):
     assert all(r.state.value == "finished" for r in reqs)
 
 
+@pytest.mark.slow
 def test_background_role_switch(tmp_path):
     """§4.3: mask lost experts now (downtime = missing-experts level),
     restore full integrity via a deferred role switch while serving."""
@@ -204,6 +210,7 @@ def test_background_role_switch(tmp_path):
     assert bool(np.asarray(eng.runtime.expert_mask).all())
 
 
+@pytest.mark.slow
 def test_dense_ffn_tp_group_rebalance(tmp_path):
     """§3.4: kimi-style first-k dense layers — losing an MoE device's
     dense-FFN shard (without role switch) compromises its TP group and
@@ -231,6 +238,7 @@ def test_dense_ffn_tp_group_rebalance(tmp_path):
     assert any("dense-FFN TP group" in a for a in eng.reports[0].actions)
 
 
+@pytest.mark.slow
 def test_straggler_detection_and_isolation(tmp_path):
     """Slowdown handling (the paper's §6 future work, implemented): a
     device that silently slows 10x is detected by the straggler detector
@@ -254,6 +262,7 @@ def test_straggler_detection_and_isolation(tmp_path):
     assert straggler_reports[0].event.severity.name == "L4"
 
 
+@pytest.mark.slow
 def test_replica_rebalancing_follows_usage(tmp_path):
     """§3.4/§4.3: redundant replica slots re-point at the hottest experts
     (with weights copied), and the re-placement changes which failures
@@ -313,6 +322,7 @@ def test_dense_arch_attention_recovery(tmp_path):
     assert rep.compile_source == "precompiled"
 
 
+@pytest.mark.slow
 def test_hybrid_arch_serving_and_recovery(tmp_path):
     """Jamba-family serving: Mamba state + windowed attention caches ride
     the same executor machinery; recovery re-prefills state like KV
@@ -332,6 +342,7 @@ def test_hybrid_arch_serving_and_recovery(tmp_path):
     assert eng.reports and eng.reports[0].migrated >= 1
 
 
+@pytest.mark.slow
 def test_ssm_arch_serving_and_recovery(tmp_path):
     """Attention-free falcon-mamba: no KV blocks to roll back, state
     rollback is the (free) discard of the uncommitted cache pytree."""
@@ -345,3 +356,31 @@ def test_ssm_arch_serving_and_recovery(tmp_path):
     eng.run(max_steps=150)
     assert all(r.state.value == "finished" for r in reqs)
     assert eng.reports and eng.reports[0].scenario == "attn"
+
+
+def test_fused_moe_path_survives_fail_rank_and_mask(tmp_path):
+    """ReviveMoE §3.4 on the fused Pallas pipeline: a failed expert rank
+    (``fail_rank`` drops its replicas) plus ``mask_experts`` on the fully
+    lost experts are pure MoERuntime mutations — the fused MoE step keeps
+    serving from the same compiled graphs with zero fresh compilation."""
+    cfg = small_moe_cfg(redundant=0)
+    ec = EngineConfig(mode="disaggregated", num_dp=2, num_moe=2,
+                      max_batch=2, max_seq=64, block_size=8, num_blocks=64,
+                      workdir=str(tmp_path), moe_impl="fused",
+                      policy=RecoveryPolicy(allow_role_switch=False,
+                                            min_ep_for_missing=2))
+    eng = InferenceEngine(cfg, ec)
+    assert eng.cfg.moe_fused          # EngineConfig override took effect
+    reqs = submit_all(eng, cfg, n=3)
+    eng.injector.schedule(3, 3, severity=Severity.L6, component="moe")
+    eng.run(max_steps=120)
+    assert all(r.state.value == "finished" for r in reqs)
+    rep = eng.reports[0]
+    assert rep.moe_plan.kind is MoERecoveryKind.MISSING_EXPERTS
+    # fail_rank dropped the dead rank's slots; mask_experts hides them
+    mask = np.asarray(eng.runtime.expert_mask)
+    assert (~mask).sum() == 2
+    # zero recompiles: the post-failure graph came from the precompiled
+    # cache and no real compilation happened during recovery
+    assert rep.compile_source == "precompiled"
+    assert rep.timings.get("compile", 0.0) < 0.01

@@ -10,6 +10,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, \
     get_config, get_smoke_config
@@ -53,15 +54,20 @@ def test_long_context_policy():
     assert get_config("mistral-large-123b", "decode_32k").sliding_window == 0
 
 
-def test_moe_dist_matches_local_on_host_mesh():
+@pytest.mark.parametrize("impl", ["gather_psum", "gather_psum_fused"])
+def test_moe_dist_matches_local_on_host_mesh(impl):
     """The shard_map gather_psum path must be numerically identical to
-    the single-rank path (mesh 1x1 -> collectives are identity)."""
+    the single-rank path (mesh 1x1 -> collectives are identity), for both
+    the dense-scatter and the fused local compute."""
     from repro.distributed.collectives import MoEDist
     cfg = get_smoke_config("qwen2-moe-a2.7b")
     cfg = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+        moe_impl=impl)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    m_local = Model(cfg)
+    # local reference stays on the dense-scatter path: the fused variant
+    # must match it, not merely itself
+    m_local = Model(dataclasses.replace(cfg, moe_impl="gather_psum"))
     m_dist = Model(cfg, moe_dist=MoEDist(mesh, dp_axes=("data",)))
     params = m_local.init(KEY)
     batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size),
@@ -72,13 +78,16 @@ def test_moe_dist_matches_local_on_host_mesh():
                                atol=2e-4)
 
 
-def test_a2a_dist_matches_local_on_host_mesh():
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["a2a", "a2a_fused"])
+def test_a2a_dist_matches_local_on_host_mesh(impl):
     from repro.distributed.collectives import MoEDistA2A
     cfg = get_smoke_config("qwen2-moe-a2.7b")
     cfg = dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+        moe_impl=impl)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    m_local = Model(cfg)
+    m_local = Model(dataclasses.replace(cfg, moe_impl="gather_psum"))
     m_dist = Model(cfg, moe_dist=MoEDistA2A(mesh, dp_axes=("data",)))
     params = m_local.init(KEY)
     batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size),
