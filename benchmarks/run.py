@@ -32,7 +32,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     choices=[None, "recovery", "lost_experts",
                              "compile_cache", "reinit", "roofline",
-                             "slo", "moe_hotpath"])
+                             "slo", "moe_hotpath", "fleet_slo"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append the CSV-summary rows to PATH as JSON")
     args = ap.parse_args(argv)
@@ -99,6 +99,19 @@ def main(argv=None) -> int:
         if r32:
             csv_rows.append(("lost_experts_r32_dCE", "0",
                              f"delta_ce={r32['ce'] - base['ce']:+.4f}"))
+
+    if want("fleet_slo"):
+        from benchmarks import fleet_slo
+        out = fleet_slo.run(quick=args.quick)
+        fleet_slo.print_table(out)
+        fleet_slo.save_json(out)
+        for name, res in out["policies"].items():
+            csv_rows.append((f"fleet_slo_{name}_p99_ttft",
+                             f"{res['p99_ttft_s'] * 1e6:.0f}",
+                             f"p99_degradation_ms="
+                             f"{res['p99_degradation_s'] * 1e3:.0f}"))
+        csv_rows.append(("fleet_slo_revive_beats_restart",
+                         "1" if out["revive_beats_restart"] else "0", ""))
 
     if want("slo"):
         from benchmarks import slo_timeline

@@ -98,6 +98,23 @@ class StragglerDetector:
         n = len(s)
         return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
 
+    def suspects(self) -> Dict[int, float]:
+        """Soft signal: devices currently over ``ratio`` × fleet median,
+        *before* patience promotes them to a hard L4 fault.  The fleet's
+        RecoveryArbiter consumes this to drain an instance proactively
+        (substitute a spare / shift traffic) instead of waiting for the
+        straggler to throttle every collective step."""
+        devs = {pid: buf for pid, buf in self.samples.items()
+                if len(buf) >= self.min_samples}
+        if len(devs) < 2:
+            return {}
+        medians = {pid: self._median(buf) for pid, buf in devs.items()}
+        fleet = self._median(list(medians.values()))
+        if fleet <= 0:
+            return {}
+        return {pid: m / fleet for pid, m in medians.items()
+                if m > self.ratio * fleet and pid not in self._reported}
+
     def check(self) -> List[FaultEvent]:
         devs = {pid: buf for pid, buf in self.samples.items()
                 if len(buf) >= self.min_samples}

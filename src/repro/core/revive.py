@@ -50,6 +50,20 @@ class RecoveryReport:
     def total_s(self) -> float:
         return sum(self.timings.values())
 
+    def cost_inputs(self) -> Dict[str, float]:
+        """Measured inputs for the fleet RecoveryArbiter's cost model:
+        the downtime this revive actually cost, split into the terms the
+        arbiter's estimates are built from."""
+        return {
+            "total_s": self.total_s,
+            "weights_s": self.timings.get("generator", 0.0),
+            "compile_s": (self.timings.get("compile", 0.0)
+                          + self.timings.get("read_cache", 0.0)),
+            "comm_s": (self.timings.get("xccl", 0.0)
+                       + self.timings.get("distributed_groups", 0.0)),
+            "migrated": float(self.migrated),
+        }
+
     def summary(self) -> str:
         cats = ", ".join(f"{k}={v * 1e3:.1f}ms"
                          for k, v in sorted(self.timings.items()) if v > 0)

@@ -1,0 +1,44 @@
+"""Convenience construction of a homogeneous fleet.
+
+All instances (spares included) share one workdir: the first build
+writes ``weights.npz`` and every later build restores it, so the fleet
+is *weight-identical* — the precondition for exact cross-instance token
+replay — and they share the on-disk XLA compile cache, so spares warm up
+from cached compiles the way a real standby would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.fleet.arbiter import CostModel, RecoveryArbiter
+from repro.fleet.instance import FleetInstance, InstanceState
+from repro.fleet.router import FleetRouter
+from repro.fleet.spares import SparePool
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+
+def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
+                instances: int = 2, spares: int = 0,
+                force_policy: Optional[str] = None,
+                soft_patience: int = 1,
+                traffic=None) -> FleetRouter:
+    if instances < 1:
+        raise ValueError(f"instances must be >= 1, got {instances!r}")
+    if spares < 0:
+        raise ValueError(f"spares must be >= 0, got {spares!r}")
+
+    def _engine() -> InferenceEngine:
+        # each engine gets its own config object (engines mutate theirs)
+        return InferenceEngine(cfg, dataclasses.replace(ecfg))
+
+    members = [FleetInstance(i, _engine()) for i in range(instances)]
+    pool = SparePool(
+        lambda iid: FleetInstance(iid, _engine(), InstanceState.SPARE),
+        size=spares) if spares else None
+    arbiter = RecoveryArbiter(
+        CostModel(members[0].engine.init_timings),
+        force_policy=force_policy, soft_patience=soft_patience)
+    return FleetRouter(members, spares=pool, arbiter=arbiter,
+                       traffic=traffic)

@@ -1,0 +1,304 @@
+"""Cluster router: N engine instances, continuous admission, arbitration.
+
+The router is the gateway: it owns the authoritative record of every
+request (prompt + tokens streamed back so far), routes new arrivals to
+the least-loaded serving instance, and executes the
+:class:`~repro.fleet.arbiter.RecoveryArbiter`'s per-fault decisions —
+in-place revive, drain-and-restart, or spare substitution with live
+request migration.
+
+Virtual clock
+=============
+Everything runs in one process, so a naive wall clock would charge one
+instance's restart stall to the whole fleet.  Instead the fleet advances
+a *virtual clock*: each tick, all available instances step once
+(lockstep, as a real fleet would concurrently) and the clock advances by
+the longest measured step.  Recovery stalls are converted into
+per-instance *freezes* — measured wall seconds during which only that
+instance skips ticks — which is exactly the semantics of a real fleet
+where the wounded instance is unavailable while its peers keep serving.
+TTFT/goodput are therefore measured on a clock where revive, restart and
+spare substitution penalize only the instance that pays them.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.fleet.arbiter import ArbiterDecision, CostModel, RecoveryArbiter
+from repro.fleet.instance import FleetInstance, InstanceState
+from repro.fleet.spares import SparePool
+from repro.serving.request import Request, RequestState
+
+_MIN_TICK_S = 1e-4
+
+
+class FleetRouter:
+    def __init__(self, instances: List[FleetInstance], *,
+                 spares: Optional[SparePool] = None,
+                 arbiter: Optional[RecoveryArbiter] = None,
+                 traffic=None):
+        if not instances:
+            raise ValueError("FleetRouter needs at least one instance")
+        self.instances: Dict[int, FleetInstance] = {
+            i.iid: i for i in instances}
+        if len(self.instances) != len(instances):
+            raise ValueError("duplicate instance ids")
+        self.spares = spares
+        self.arbiter = arbiter or RecoveryArbiter(
+            CostModel(instances[0].engine.init_timings))
+        self.traffic = traffic
+        self.now_s = 0.0
+        self.ticks = 0
+        self.requests: List[Request] = []        # gateway record
+        self.meta: Dict[int, Dict] = {}          # req_id -> virtual times
+        self.log: List[str] = []
+        self._frozen: Dict[int, float] = {}      # iid -> stall seconds left
+        self._pending: Dict[int, List[ArbiterDecision]] = {}
+        self._report_seen: Dict[int, int] = {}
+        for inst in instances:
+            self._enroll(inst)
+
+    # -- membership --------------------------------------------------------------
+
+    def _enroll(self, inst: FleetInstance) -> None:
+        self.instances[inst.iid] = inst
+        self._report_seen.setdefault(inst.iid, len(inst.engine.reports))
+        inst.set_arbitration(self._arbitrate)
+
+    def _spare_available(self) -> bool:
+        return self.spares is not None and self.spares.available > 0
+
+    def serving(self) -> List[FleetInstance]:
+        return [i for i in self.instances.values()
+                if i.state in (InstanceState.SERVING,
+                               InstanceState.DRAINING)]
+
+    def available(self, inst: FleetInstance) -> bool:
+        return (inst.state in (InstanceState.SERVING,
+                               InstanceState.DRAINING)
+                and self._frozen.get(inst.iid, 0.0) <= 0.0)
+
+    # -- admission ----------------------------------------------------------------
+
+    def submit(self, prompt_tokens, max_new_tokens: int = 16, *,
+               eos_token=None, arrival_s: Optional[float] = None
+               ) -> Request:
+        targets = [i for i in self.instances.values()
+                   if i.accepting and self._frozen.get(i.iid, 0.0) <= 0.0]
+        if not targets:
+            # every instance stalled/draining: park on the least-loaded
+            # serving-or-draining one; it will catch up when unfrozen
+            targets = self.serving()
+        if not targets:
+            raise RuntimeError("fleet has no serving instances left")
+        inst = min(targets, key=lambda i: i.load)
+        req = inst.submit(prompt_tokens, max_new_tokens,
+                          eos_token=eos_token)
+        self.requests.append(req)
+        self.meta[req.req_id] = {
+            "arrival_s": self.now_s if arrival_s is None else arrival_s,
+            "first_token_s": None, "finish_s": None,
+            "instances": [inst.iid],
+        }
+        return req
+
+    def _pump(self) -> None:
+        if self.traffic is None:
+            return
+        if self.unfinished == 0 and not self._frozen:
+            # fleet idle: discrete-event fast-forward to the next arrival
+            # (idle ticks otherwise advance the clock by ~nothing)
+            nxt = self.traffic.next_at
+            if nxt is not None and nxt > self.now_s:
+                self.now_s = nxt
+        for a in self.traffic.due(self.now_s):
+            self.submit(list(a.prompt_tokens), a.max_new_tokens,
+                        arrival_s=a.at_s)
+
+    # -- arbitration callbacks ------------------------------------------------------
+
+    def _arbitrate(self, inst: FleetInstance, event) -> str:
+        dec = self.arbiter.decide(inst, event,
+                                  spare_available=self._spare_available())
+        self.log.append(dec.summary())
+        if dec.policy == "revive":
+            return "revive"
+        self._pending.setdefault(inst.iid, []).append(dec)
+        return dec.policy
+
+    def lose_instance(self, iid: int, reason: str = "host loss") -> None:
+        """Full-instance loss: every device at once.  Revive is off the
+        table; the arbiter picks spare substitution or rebuild — either
+        way the gateway re-homes the in-flight requests immediately."""
+        inst = self.instances[iid]
+        inst.fail_instance(reason)
+        dec = self.arbiter.decide(inst, None, instance_lost=True,
+                                  spare_available=self._spare_available())
+        self.log.append(dec.summary())
+        if dec.policy == "spare":
+            self._substitute(inst, reason)
+            return
+        # no spare (or forced restart): re-home requests onto survivors,
+        # rebuild the host off the serving path, rejoin when done
+        reqs = inst.export_requests()
+        survivors = {i.iid: i for i in self.serving() if i.iid != iid}
+        if survivors:
+            from repro.core.migration import plan_migration
+            loads = {i.iid: i.load for i in survivors.values()}
+            for r, target_iid in plan_migration(reqs, loads):
+                survivors[target_iid].admit(r)
+                self.meta[r.req_id]["instances"].append(target_iid)
+            self.log.append(
+                f"[router] re-homed {len(reqs)} requests off lost "
+                f"instance {iid}")
+            elapsed = inst.restart()
+            self.arbiter.cost.observe_restart(elapsed)
+            self._freeze(inst, elapsed)
+        else:
+            # last instance standing: requests must wait out the rebuild
+            elapsed = inst.restart()
+            self.arbiter.cost.observe_restart(elapsed)
+            self._freeze(inst, elapsed)
+            for r in reqs:
+                inst.admit(r)
+                self.meta[r.req_id]["instances"].append(inst.iid)
+
+    # -- policy execution -----------------------------------------------------------
+
+    def _freeze(self, inst: FleetInstance, stall_s: float) -> None:
+        self._frozen[inst.iid] = self._frozen.get(inst.iid, 0.0) + stall_s
+        self.log.append(f"[router] instance {inst.iid} unavailable "
+                        f"{stall_s * 1e3:.0f}ms (virtual)")
+
+    def _substitute(self, inst: FleetInstance, reason: str) -> None:
+        spare = self.spares.acquire() if self.spares else None
+        if spare is None:                      # pool dry: degrade to restart
+            elapsed = inst.restart()
+            self.arbiter.cost.observe_restart(elapsed)
+            self._freeze(inst, elapsed)
+            return
+        t0 = time.perf_counter()
+        reqs = inst.export_requests()
+        tokens = sum(r.num_tokens for r in reqs)
+        for r in reqs:
+            spare.admit(r)
+            self.meta[r.req_id]["instances"].append(spare.iid)
+        swap_s = time.perf_counter() - t0
+        self.arbiter.cost.observe_spare(swap_s, tokens)
+        inst.decommission(reason)
+        self._enroll(spare)
+        self.log.append(
+            f"[router] spare {spare.iid} substituted for {inst.iid} "
+            f"({len(reqs)} requests, {tokens} tokens to re-prefill, "
+            f"swap {swap_s * 1e3:.1f}ms)")
+
+    def _execute(self, inst: FleetInstance, dec: ArbiterDecision) -> None:
+        if dec.policy == "restart":
+            elapsed = inst.restart()
+            self.arbiter.cost.observe_restart(elapsed)
+            self._freeze(inst, elapsed)
+        elif dec.policy == "spare":
+            self._substitute(
+                inst, dec.reason if dec.proactive else "fault: substituted")
+        else:
+            raise ValueError(f"unexpected deferred policy {dec.policy!r}")
+
+    # -- main loop -------------------------------------------------------------------
+
+    def tick(self) -> List[Request]:
+        """One fleet step: admit due traffic, step every available
+        instance in lockstep, execute deferred recovery decisions, and
+        advance the virtual clock by the longest measured step."""
+        self.ticks += 1
+        self._pump()
+        finished: List[Request] = []
+        step_durs = [0.0]
+        for inst in list(self.instances.values()):
+            if not self.available(inst):
+                continue
+            pre = self._report_seen.get(inst.iid, 0)
+            t0 = time.perf_counter()
+            finished.extend(inst.step())
+            dt = time.perf_counter() - t0
+            # inline revive stalls charge the instance, not the fleet
+            revive_s = 0.0
+            reports = inst.engine.reports
+            for rep in reports[pre:]:
+                if rep.scenario == "benign":
+                    continue
+                self.arbiter.cost.observe_revive(rep.cost_inputs())
+                revive_s += rep.total_s
+            self._report_seen[inst.iid] = len(reports)
+            if revive_s > 0.0:
+                self._freeze(inst, revive_s)
+                self.log.append(
+                    f"[router] instance {inst.iid} revived in place "
+                    f"({revive_s * 1e3:.0f}ms)")
+            step_durs.append(max(0.0, dt - revive_s))
+            for dec in self._pending.pop(inst.iid, []):
+                self._execute(inst, dec)
+        for inst in self.serving():
+            if not self.available(inst):
+                continue
+            dec = self.arbiter.consider_soft(
+                inst, spare_available=self._spare_available())
+            if dec is not None:
+                self.log.append(dec.summary())
+                if dec.policy == "spare":
+                    self._substitute(inst, "straggler: substituted")
+        inc = max(max(step_durs), _MIN_TICK_S)
+        # discrete-event fast-forward: if every available instance is
+        # idle but work is parked behind a freeze (e.g. a restarting
+        # instance's queue), jump to the earliest unfreeze — wall time
+        # passes while a host rebuilds, even when nothing else computes
+        if self._frozen:
+            idle = all(i.engine.unfinished == 0
+                       for i in self.instances.values()
+                       if self.available(i))
+            if idle:
+                jump = min(self._frozen.values())
+                if self.traffic is not None \
+                        and not self.traffic.exhausted:
+                    jump = min(jump, max(
+                        self.traffic.next_at - self.now_s, 0.0))
+                inc = max(inc, jump)
+        self.now_s += inc
+        for iid in list(self._frozen):
+            self._frozen[iid] -= inc
+            if self._frozen[iid] <= 0.0:
+                del self._frozen[iid]
+        self._note_progress()
+        return finished
+
+    def _note_progress(self) -> None:
+        for r in self.requests:
+            m = self.meta[r.req_id]
+            if m["first_token_s"] is None and r.output_tokens:
+                m["first_token_s"] = self.now_s
+            if m["finish_s"] is None and r.state is RequestState.FINISHED:
+                m["finish_s"] = self.now_s
+
+    @property
+    def unfinished(self) -> int:
+        return sum(1 for r in self.requests
+                   if r.state not in (RequestState.FINISHED,
+                                      RequestState.FAILED))
+
+    def run(self, max_ticks: int = 2000) -> List[Request]:
+        """Tick until the traffic source is exhausted and every request
+        finished (or max_ticks)."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.tick())
+            drained = self.traffic is None or self.traffic.exhausted
+            if drained and not self.unfinished:
+                break
+        return done
+
+    # -- metrics ---------------------------------------------------------------------
+
+    def ttfts(self) -> List[float]:
+        return [m["first_token_s"] - m["arrival_s"]
+                for m in self.meta.values()
+                if m["first_token_s"] is not None]

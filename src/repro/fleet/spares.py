@@ -1,0 +1,56 @@
+"""Pre-warmed hot spares (FailSafe-style standby substitution).
+
+A spare is a fully built ``InferenceEngine``: weights loaded from the
+shared fleet checkpoint, serving graphs compiled (and failure-scenario
+graphs precompiled) via the shared on-disk ``GraphCache``.  Activation
+is therefore a control-plane action — flip state, re-home requests — not
+an init: the multi-second build cost was paid at provisioning time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+from repro.fleet.instance import FleetInstance, InstanceState
+
+
+class SparePool:
+    def __init__(self, factory: Callable[[int], FleetInstance],
+                 size: int, first_iid: int = 1000):
+        """factory(iid) must return a built, SPARE-state FleetInstance.
+
+        ``first_iid`` namespaces spare ids away from the serving set.
+        """
+        self._factory = factory
+        self._next_iid = first_iid
+        self.warm: List[FleetInstance] = []
+        self.activations = 0
+        self.warmup_s: List[float] = []
+        for _ in range(size):
+            self._provision()
+
+    def _provision(self) -> FleetInstance:
+        t0 = time.perf_counter()
+        inst = self._factory(self._next_iid)
+        self.warmup_s.append(time.perf_counter() - t0)
+        inst.state = InstanceState.SPARE
+        self._next_iid += 1
+        self.warm.append(inst)
+        return inst
+
+    @property
+    def available(self) -> int:
+        return len(self.warm)
+
+    def acquire(self) -> Optional[FleetInstance]:
+        """Hand a warm standby to the router (None if the pool is dry)."""
+        if not self.warm:
+            return None
+        inst = self.warm.pop(0)
+        inst.state = InstanceState.SERVING
+        self.activations += 1
+        return inst
+
+    def replenish(self) -> FleetInstance:
+        """Provision a fresh standby (background capacity repair)."""
+        return self._provision()

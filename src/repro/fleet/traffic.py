@@ -1,0 +1,84 @@
+"""Open-loop traffic sources for the fleet router.
+
+Open-loop means arrivals do not wait for the system: during a recovery
+stall the arrival process keeps producing, the queue grows, and TTFT
+degrades — which is exactly the client-visible cost the fleet benchmark
+measures.  Closed-loop drivers (submit-on-completion) hide that cost.
+
+Both sources yield :class:`Arrival` records against a caller-supplied
+clock (wall seconds in benchmarks, synthetic seconds in tests), so runs
+are reproducible given a seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Arrival:
+    at_s: float                 # arrival time on the driver's clock
+    prompt_tokens: Tuple[int, ...]
+    max_new_tokens: int
+
+
+class PoissonTraffic:
+    """Memoryless open-loop arrivals at ``rate_per_s``, random prompts."""
+
+    def __init__(self, rate_per_s: float, vocab_size: int, *,
+                 prompt_len: int = 8, max_new_tokens: int = 16,
+                 seed: int = 0, limit: Optional[int] = None):
+        if rate_per_s <= 0:
+            raise ValueError(f"rate_per_s must be > 0, got {rate_per_s!r}")
+        self.rate = rate_per_s
+        self.rng = np.random.default_rng(seed)
+        self.vocab_size = vocab_size
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.limit = limit
+        self._next_at = float(self.rng.exponential(1.0 / self.rate))
+        self._emitted = 0
+
+    def due(self, now_s: float) -> List[Arrival]:
+        """All arrivals with at_s <= now_s that were not yet emitted."""
+        out: List[Arrival] = []
+        while self._next_at <= now_s and (
+                self.limit is None or self._emitted < self.limit):
+            prompt = tuple(int(t) for t in self.rng.integers(
+                0, self.vocab_size, self.prompt_len))
+            out.append(Arrival(self._next_at, prompt, self.max_new_tokens))
+            self._emitted += 1
+            self._next_at += float(self.rng.exponential(1.0 / self.rate))
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return self.limit is not None and self._emitted >= self.limit
+
+    @property
+    def next_at(self) -> Optional[float]:
+        """Arrival time of the next pending request (None if exhausted)."""
+        return None if self.exhausted else self._next_at
+
+
+class TraceTraffic:
+    """Replay an explicit arrival trace (deterministic tests/benchmarks)."""
+
+    def __init__(self, arrivals: Sequence[Arrival]):
+        self._pending = sorted(arrivals, key=lambda a: a.at_s)
+
+    def due(self, now_s: float) -> List[Arrival]:
+        out = []
+        while self._pending and self._pending[0].at_s <= now_s:
+            out.append(self._pending.pop(0))
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending
+
+    @property
+    def next_at(self):
+        return self._pending[0].at_s if self._pending else None

@@ -1,7 +1,13 @@
-"""Serving launcher: a FlowServe instance with ReviveMoE recovery.
+"""Serving launcher: FlowServe instance(s) with ReviveMoE recovery.
 
+Single instance:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-moe-a2.7b \
       --mode disaggregated --requests 8 --inject-fault moe
+
+Fleet mode — N instances + K hot spares behind the cluster router, with
+restart-vs-revive-vs-spare arbitration and optional full-instance loss:
+  PYTHONPATH=src python -m repro.launch.serve --fleet 3 --spares 1 \
+      --requests 24 --inject-fault moe --lose-instance 1
 """
 from __future__ import annotations
 
@@ -9,6 +15,55 @@ import argparse
 import sys
 
 import numpy as np
+
+
+def _run_fleet(args, cfg) -> int:
+    from repro.core.fault_codes import ErrorType, Severity
+    from repro.fleet import PoissonTraffic, build_fleet
+    from repro.serving.engine import EngineConfig
+
+    ec = EngineConfig(mode=args.mode, num_dp=args.num_dp,
+                      num_moe=args.num_moe, max_batch=4, max_seq=128,
+                      block_size=16, num_blocks=256,
+                      workdir=args.workdir)
+    traffic = PoissonTraffic(args.rate, cfg.vocab_size, prompt_len=12,
+                             max_new_tokens=args.max_new, seed=0,
+                             limit=args.requests)
+    print(f"building fleet: {args.fleet} x [{args.arch} {args.mode} "
+          f"{args.num_dp}DP+{args.num_moe if cfg.moe else 0}MoE] + "
+          f"{args.spares} spare(s)")
+    fleet = build_fleet(cfg, ec, instances=args.fleet,
+                        spares=args.spares,
+                        force_policy=args.force_policy, traffic=traffic)
+    if args.inject_fault:
+        pid = (args.num_dp if args.inject_fault == "moe"
+               and args.mode == "disaggregated" else 1)
+        fleet.instances[0].engine.injector.schedule(
+            args.fault_step, pid, severity=Severity.L6,
+            error_type=ErrorType.HBM_ECC, component=args.inject_fault,
+            mid_step=True)
+        print(f"scheduled {args.inject_fault} device fault on instance 0 "
+              f"pid {pid} at engine step {args.fault_step}")
+    lost = False
+    for _ in range(4000):
+        fleet.tick()
+        if (args.lose_instance is not None and not lost
+                and fleet.ticks == 2 * args.fault_step):
+            print(f"injecting full loss of instance {args.lose_instance}")
+            fleet.lose_instance(args.lose_instance)
+            lost = True
+        if traffic.exhausted and fleet.requests and not fleet.unfinished:
+            break
+    done = sum(r.state.value == "finished" for r in fleet.requests)
+    ttfts = sorted(fleet.ttfts())
+    print(f"\nfinished {done}/{len(fleet.requests)} requests in "
+          f"{fleet.ticks} ticks ({fleet.now_s:.2f}s virtual)")
+    if ttfts:
+        print(f"TTFT p50={ttfts[len(ttfts) // 2] * 1e3:.0f}ms "
+              f"max={ttfts[-1] * 1e3:.0f}ms")
+    for line in fleet.log:
+        print(" ", line)
+    return 0 if done == len(fleet.requests) else 1
 
 
 def main(argv=None):
@@ -24,6 +79,18 @@ def main(argv=None):
                     choices=[None, "attn", "moe"])
     ap.add_argument("--fault-step", type=int, default=5)
     ap.add_argument("--workdir", default="/tmp/repro_serve")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="run N instances behind the fleet router")
+    ap.add_argument("--spares", type=int, default=0, metavar="K",
+                    help="pre-warm K hot-spare instances (fleet mode)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop Poisson arrival rate (fleet mode)")
+    ap.add_argument("--force-policy", default=None,
+                    choices=[None, "revive", "restart", "spare"],
+                    help="pin the recovery arbiter (fleet mode)")
+    ap.add_argument("--lose-instance", type=int, default=None,
+                    metavar="IID", help="inject a full-instance loss "
+                    "(fleet mode)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_smoke_config
@@ -31,6 +98,8 @@ def main(argv=None):
     from repro.serving.engine import EngineConfig, InferenceEngine
 
     cfg = get_smoke_config(args.arch)
+    if args.fleet > 0:
+        return _run_fleet(args, cfg)
     ec = EngineConfig(mode=args.mode, num_dp=args.num_dp,
                       num_moe=args.num_moe, max_batch=4, max_seq=128,
                       block_size=16, num_blocks=256, workdir=args.workdir)
@@ -56,6 +125,11 @@ def main(argv=None):
     eng.run(max_steps=500)
     done = sum(r.state.value == "finished" for r in reqs)
     print(f"finished {done}/{len(reqs)} requests in {eng.step_no} steps")
+    ttfts = sorted(r.ttft_s for r in reqs if r.ttft_s is not None)
+    if ttfts:
+        # single-engine mode has no virtual clock: wall TTFT is the metric
+        print(f"TTFT p50={ttfts[len(ttfts) // 2] * 1e3:.0f}ms "
+              f"max={ttfts[-1] * 1e3:.0f}ms")
     for rep in eng.reports:
         print("RECOVERY:", rep.summary())
         for a in rep.actions:

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.comm_domain import CommDomain
+from repro.core.fault_codes import Action
 from repro.core.detection import (AnnotationPoller, HeartbeatMonitor,
                                   StragglerDetector)
 from repro.core.expert_map import ExpertMap
@@ -110,6 +111,56 @@ class EngineConfig:
     # keeps the model config's choice
     moe_impl: Optional[str] = None
 
+    def __post_init__(self):
+        # ValueError (not assert) so misconfiguration still fails loudly
+        # under `python -O`
+        if self.mode not in ("collocated", "disaggregated"):
+            raise ValueError(
+                f"EngineConfig.mode must be 'collocated' or "
+                f"'disaggregated', got {self.mode!r}")
+        for name in ("num_dp", "max_batch", "max_seq", "block_size",
+                     "num_blocks"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"EngineConfig.{name} must be a positive int, "
+                    f"got {v!r}")
+        if not isinstance(self.num_moe, int) or self.num_moe < 0:
+            raise ValueError(
+                f"EngineConfig.num_moe must be a non-negative int, "
+                f"got {self.num_moe!r}")
+        if self.heartbeat_timeout_steps < 1:
+            raise ValueError(
+                f"EngineConfig.heartbeat_timeout_steps must be >= 1, "
+                f"got {self.heartbeat_timeout_steps!r}")
+        if (self.moe_impl is not None
+                and self.moe_impl not in ModelConfig.MOE_IMPLS):
+            raise ValueError(
+                f"EngineConfig.moe_impl must be one of "
+                f"{ModelConfig.MOE_IMPLS} or None, got {self.moe_impl!r}")
+
+
+@dataclass
+class InstanceHealth:
+    """Engine health surface consumed by the fleet control plane."""
+    serving: bool                # >=1 healthy attention rank
+    healthy_dp: int
+    total_dp: int
+    healthy_moe: int
+    total_moe: int
+    expert_coverage: float       # 1.0 = every logical expert has a live slot
+    queue_depth: int             # waiting + running on healthy ranks
+    unfinished: int
+    soft_signals: Dict[int, float] = field(default_factory=dict)
+    # physical_id -> slowdown ratio vs fleet median (straggler suspicion)
+
+    @property
+    def degraded(self) -> bool:
+        return (self.healthy_dp < self.total_dp
+                or self.healthy_moe < self.total_moe
+                or self.expert_coverage < 1.0
+                or bool(self.soft_signals))
+
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = None):
@@ -118,7 +169,6 @@ class InferenceEngine:
             import dataclasses
             cfg = dataclasses.replace(cfg, moe_impl=self.ecfg.moe_impl)
         self.cfg = cfg
-        assert self.ecfg.mode in ("collocated", "disaggregated")
         if cfg.moe is None:
             # dense model: no expert ranks; disaggregated degenerates
             self.ecfg.mode = "collocated"
@@ -131,6 +181,13 @@ class InferenceEngine:
         # between steps while service continues
         self.pending_switches: List[Any] = []
         self.background_reports: List[Dict] = []
+        # fleet hook: called with each actionable FaultEvent BEFORE the
+        # in-place revive pipeline runs; returning anything other than
+        # "revive" defers handling to the fleet control plane (the engine
+        # only isolates the failed device; the router tracks the rest)
+        self.fault_interceptor = None
+        # latest straggler suspicion {physical_id: slowdown ratio}
+        self.soft_signals: Dict[int, float] = {}
         self._build(first_time=True)
 
     # -- construction / reinitialization ---------------------------------------
@@ -308,10 +365,56 @@ class InferenceEngine:
     def _assign(self, req: Request) -> None:
         healthy = [ex for ex in self.dp_executors
                    if ex.alive and ex.cache is not None]
-        assert healthy, "no healthy attention ranks"
+        if not healthy:
+            raise RuntimeError(
+                "no healthy attention ranks left on this instance")
         ex = min(healthy, key=lambda e: e.scheduler.num_requests)
         req.dp_rank = ex.dp_rank
         ex.scheduler.add_request(req)
+
+    def admit(self, req: Request) -> Request:
+        """Admit a request created elsewhere (cross-instance migration):
+        it re-enters with prompt + decoded prefix intact, so the next
+        prefill resumes generation without redoing completed tokens."""
+        self._assign(req)
+        if all(r is not req for r in self.all_requests):
+            self.all_requests.append(req)
+        return req
+
+    def export_live_requests(self) -> List[Request]:
+        """Fleet drain/export hook: strip every unfinished request off
+        this instance — dead executors included, their token ids live in
+        host memory — prepared for re-prefill on another instance."""
+        from repro.core.migration import prepare_for_migration
+        out: List[Request] = []
+        for ex in self.dp_executors:
+            for req in ex.scheduler.drain():
+                if req.state in (RequestState.FINISHED,
+                                 RequestState.FAILED):
+                    continue
+                prepare_for_migration(req)
+                out.append(req)
+        gone = {r.req_id for r in out}
+        self.all_requests = [r for r in self.all_requests
+                             if r.req_id not in gone]
+        return out
+
+    def health(self) -> InstanceHealth:
+        healthy_dp = [ex for ex in self.dp_executors
+                      if ex.alive and ex.cache is not None]
+        healthy_moe = [m for m in self.moe_executors if m.device_alive]
+        cov = (self.expert_map.coverage()
+               if self.expert_map is not None else 1.0)
+        return InstanceHealth(
+            serving=bool(healthy_dp),
+            healthy_dp=len(healthy_dp), total_dp=len(self.dp_executors),
+            healthy_moe=len(healthy_moe),
+            total_moe=len(self.moe_executors),
+            expert_coverage=cov,
+            queue_depth=sum(ex.scheduler.num_requests
+                            for ex in healthy_dp),
+            unfinished=self.unfinished,
+            soft_signals=dict(self.soft_signals))
 
     @property
     def unfinished(self) -> int:
@@ -375,6 +478,9 @@ class InferenceEngine:
             if real_compiles() == n_compiles:
                 dt = (time.perf_counter() - t0) + ex.simulated_slowdown_s
                 self.straggler.record(ex.physical_id, dt)
+        # soft signal: suspicion that has not yet hardened into an L4
+        # fault, surfaced via health() for the fleet arbiter to act on
+        self.soft_signals = self.straggler.suspects()
         for ev in self.straggler.check():
             self._handle(ev)
         for ex in self.dp_executors + self.moe_executors:
@@ -398,6 +504,15 @@ class InferenceEngine:
         if ev.rank in self._handled_faults:
             return
         self._handled_faults.add(ev.rank)
+        if (self.fault_interceptor is not None
+                and ev.action is not Action.IGNORE):
+            verdict = self.fault_interceptor(ev)
+            if verdict != "revive":
+                # the fleet owns this fault: isolate the device so the
+                # step loop skips it, then defer (restart / spare /
+                # redistribution happen at the fleet tick)
+                self._isolate_only(ev)
+                return
         report = self.recovery.recover(ev)
         self.reports.append(report)
         # inference was paused during recovery: reset the heartbeat clock
@@ -409,6 +524,22 @@ class InferenceEngine:
         for mex in self.moe_executors:
             if mex.device_alive:
                 self.monitor.beat(mex.physical_id, self.step_no)
+
+    def _isolate_only(self, ev) -> None:
+        """Minimal isolation for a fleet-deferred fault: terminate the
+        failed executor and stop expecting its heartbeats, nothing else."""
+        try:
+            self.domain.device(ev.rank).alive = False
+        except KeyError:
+            pass
+        for ex in self.dp_executors:
+            if ex.physical_id == ev.rank:
+                ex.fail_device()
+                ex.terminate_process()
+        for mex in self.moe_executors:
+            if mex.physical_id == ev.rank:
+                mex.fail_device()
+        self.monitor.unregister(ev.rank)
 
     # -- weight assembly -----------------------------------------------------------------
 
@@ -478,8 +609,9 @@ class InferenceEngine:
         weights, rebuild groups, cached-compile — everything, timed."""
         in_flight = []
         for ex in self.dp_executors:
-            if ex.alive and ex.cache is not None:
-                in_flight.extend(ex.scheduler.drain())
+            # dead executors included: their requests' token ids survive
+            # in host memory and must be requeued after the rebuild
+            in_flight.extend(ex.scheduler.drain())
         self.monitor = HeartbeatMonitor(self.ecfg.heartbeat_timeout_steps)
         # process death: in-memory executables are gone (the on-disk
         # persistent compile cache survives — that's the "cached" part)
@@ -492,4 +624,5 @@ class InferenceEngine:
                 req.state = RequestState.WAITING
                 self._assign(req)
         self._handled_faults.clear()
+        self.soft_signals = {}
         return t

@@ -135,9 +135,13 @@ class DPExecutor:
                 params, padded, lengths, runtime)
             self.cache = write_slot(self.cache, sub_cache, req.batch_slot,
                                     self.batch_axes)
+            # seed by sequence position, not engine step: the token is a
+            # pure function of (seed, prefix, position) and survives
+            # replay on any executor of any fleet instance
             tok = int(sample(np.asarray(last_logits), self.sampling,
-                             step=step_no)[0])
+                             step=req.num_tokens)[0])
             req.output_tokens.append(tok)
+            req.note_token()
             req.state = RequestState.RUNNING
             self.last_token[req.batch_slot] = tok
             if req.done:
@@ -155,10 +159,13 @@ class DPExecutor:
             # per-request loop serialized B host round trips per step)
             slots = np.fromiter((r.batch_slot for r in plan.decode),
                                 np.intp, count=len(plan.decode))
-            toks = sample(logits[slots], self.sampling, step=step_no)
+            positions = np.fromiter((r.num_tokens for r in plan.decode),
+                                    np.int64, count=len(plan.decode))
+            toks = sample(logits[slots], self.sampling, step=positions)
             for req, tok in zip(plan.decode, toks):
                 tok = int(tok)
                 req.output_tokens.append(tok)
+                req.note_token()
                 self.last_token[req.batch_slot] = tok
                 if req.done or req.num_tokens >= self.max_seq:
                     self.scheduler.finish(req, self.block_log)
@@ -185,7 +192,6 @@ class DPExecutor:
             if r.batch_slot is not None:
                 self.scheduler._free_slots.append(r.batch_slot)
                 r.batch_slot = None
-            r.state = RequestState.WAITING
-            self.scheduler.waiting.appendleft(r)
+            self.scheduler.requeue_front(r)
         self._plan = None
         return n

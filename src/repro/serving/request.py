@@ -27,11 +27,14 @@ class Request:
     state: RequestState = RequestState.WAITING
     output_tokens: List[int] = field(default_factory=list)
     arrival_time: float = field(default_factory=time.monotonic)
+    first_token_time: Optional[float] = None   # TTFT = this - arrival_time
     finish_time: Optional[float] = None
     dp_rank: Optional[int] = None        # executor currently responsible
     batch_slot: Optional[int] = None     # slot in the executor's decode batch
+    instance_id: Optional[int] = None    # fleet instance currently serving us
     eos_token: Optional[int] = None
     migrations: int = 0                  # how many times recovery moved us
+    cross_instance_migrations: int = 0   # moved to a different fleet instance
     recomputed_tokens: int = 0           # decode work redone due to recovery
 
     @property
@@ -48,6 +51,18 @@ class Request:
             return True
         return (self.eos_token is not None and self.output_tokens
                 and self.output_tokens[-1] == self.eos_token)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def note_token(self, now: Optional[float] = None) -> None:
+        """Record the first-token timestamp (idempotent)."""
+        if self.first_token_time is None and self.output_tokens:
+            self.first_token_time = (time.monotonic()
+                                     if now is None else now)
 
     def rebuild_prompt_for_migration(self) -> "Request":
         """§3.2 partial recomputation: prompt + decoded tokens become the

@@ -14,21 +14,27 @@ class SamplingParams:
 
 
 def sample(logits: np.ndarray, params: SamplingParams,
-           step: int = 0) -> np.ndarray:
+           step=0) -> np.ndarray:
     """logits: (B, V) -> (B,) int32 token ids.
 
-    Deterministic given (seed, step) *per row*: every row shares the one
-    uniform drawn for this step, so a request's token depends only on
-    its own logits — not on its batch slot or on which other requests
-    happen to be decoding this step.  Recovery replays (a surviving
-    request re-stepping after a migration changed the batch) therefore
-    reproduce the originally emitted tokens.
+    Deterministic given (seed, step) *per row*: each row's uniform is
+    drawn from (seed, its step value) alone, so a request's token
+    depends only on its own logits and step — not on its batch slot or
+    on which other requests happen to be decoding alongside it.
+
+    ``step`` may be a scalar (all rows share one draw, the pre-fleet
+    behaviour) or a per-row array.  The serving executors pass each
+    request's *sequence position* as its step, which makes the sampled
+    token a pure function of (seed, prompt, position): a request
+    replayed after migration — to another executor or to another fleet
+    instance entirely — reproduces its original tokens exactly.
     """
     logits = np.asarray(logits, dtype=np.float64)
     if params.temperature <= 0.0:
         return np.argmax(logits, axis=-1).astype(np.int32)
-    rng = np.random.default_rng(params.seed * 1_000_003 + step)
-    u = rng.random()
+    steps = np.broadcast_to(np.asarray(step, np.int64), (logits.shape[0],))
+    u = np.asarray([np.random.default_rng(
+        params.seed * 1_000_003 + int(s)).random() for s in steps])
     z = logits / params.temperature
     z = z - z.max(axis=-1, keepdims=True)
     p = np.exp(z)
@@ -40,8 +46,8 @@ def sample(logits: np.ndarray, params: SamplingParams,
         cut = csum - sorted_p > params.top_p
         sorted_p[cut] = 0.0
         sorted_p /= sorted_p.sum(axis=-1, keepdims=True)
-    # shared-u inverse CDF over the sorted distribution, vectorized
+    # per-row-u inverse CDF over the sorted distribution, vectorized
     cdf = np.cumsum(sorted_p, axis=-1)
-    idx = np.minimum((cdf < u).sum(axis=-1), logits.shape[-1] - 1)
+    idx = np.minimum((cdf < u[:, None]).sum(axis=-1), logits.shape[-1] - 1)
     return np.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
         np.int32)

@@ -50,6 +50,32 @@ class LocalScheduler:
         self.running.clear()
         return reqs
 
+    def requeue_front(self, req: Request) -> None:
+        """Requeue-after-export: a request whose step was rolled back (or
+        that came back from a failed export) re-enters at the queue front
+        so its completed decode prefix is re-prefilled before new work."""
+        req.state = RequestState.WAITING
+        self.waiting.appendleft(req)
+
+    def check_consistent(self) -> None:
+        """Invariant check used by tests and cross-instance migration:
+        slots + block tables exactly mirror the running set."""
+        slots = [r.batch_slot for r in self.running]
+        if None in slots or len(set(slots)) != len(slots):
+            raise AssertionError(f"running slots corrupt: {slots}")
+        if set(self._free_slots) & set(slots):
+            raise AssertionError(
+                f"slot both free and in use: {self._free_slots} vs {slots}")
+        if len(self._free_slots) + len(slots) != self.max_batch:
+            raise AssertionError(
+                f"slot accounting leak: {len(self._free_slots)} free + "
+                f"{len(slots)} running != {self.max_batch}")
+        table_ids = set(self.block_tables)
+        running_ids = {r.req_id for r in self.running}
+        if table_ids != running_ids:
+            raise AssertionError(
+                f"block tables {table_ids} != running {running_ids}")
+
     @property
     def num_requests(self) -> int:
         return len(self.waiting) + len(self.running)

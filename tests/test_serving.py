@@ -157,3 +157,100 @@ def test_expert_shard_split_assemble_roundtrip():
     E = gate.shape[1]
     assert float(jnp.abs(gate[:, E // 2:]).sum()) == 0.0
     assert float(jnp.abs(gate[:, : E // 2]).sum()) > 0.0
+
+# -- LocalScheduler edge cases (the invariants cross-instance migration
+# -- relies on): exhausted block pool, rollback-then-requeue consistency
+
+
+def test_admission_deferred_when_block_pool_exhausted():
+    """A request whose prefill cannot get enough blocks mid-stream stays
+    WAITING (never half-admitted) and admits once blocks free up."""
+    bm = BlockManager(num_blocks=4, block_size=4)
+    sched = LocalScheduler(max_batch=2, max_seq=32, block_manager=bm)
+    log = BlockLog()
+    hog = Request(list(range(12)), max_new_tokens=4)    # needs 4 blocks
+    late = Request(list(range(9)), max_new_tokens=4)    # needs 3 blocks
+    sched.add_request(hog)
+    sched.add_request(late)
+    log.begin_step()
+    plan = sched.plan_step(log)
+    assert plan.prefill is hog and bm.num_free == 0
+    # pool exhausted: late must NOT be admitted (no partial allocation)
+    plan = sched.plan_step(log)
+    assert plan.prefill is None
+    assert late.state is RequestState.WAITING
+    assert late.req_id not in sched.block_tables
+    assert late.batch_slot is None
+    sched.check_consistent()
+    # finishing the hog frees its blocks; late admits cleanly
+    sched.finish(hog, log)
+    plan = sched.plan_step(log)
+    assert plan.prefill is late
+    assert sched.block_tables[late.req_id].num_blocks() == 3
+    sched.check_consistent()
+
+
+def test_rollback_then_requeue_keeps_slots_and_tables_consistent():
+    """§3.3 rollback of an aborted admission must return the batch slot
+    and block table exactly; requeue_front preserves FIFO-with-priority
+    ordering.  (DPExecutor.rollback_inflight drives the same path.)"""
+    bm = BlockManager(num_blocks=8, block_size=4)
+    sched = LocalScheduler(max_batch=2, max_seq=32, block_manager=bm)
+    log = BlockLog()
+    r1 = Request(list(range(4)), max_new_tokens=4)
+    r2 = Request(list(range(4)), max_new_tokens=4)
+    sched.add_request(r1)
+    sched.add_request(r2)
+    log.begin_step()
+    sched.plan_step(log)                    # admits r1
+    log.begin_step()                        # commit r1's step
+    free_before = bm.num_free
+    slots_before = sorted(sched._free_slots)
+    sched.plan_step(log)                    # admits r2 (uncommitted)
+    # mid-step failure: undo r2's block ops, then requeue it
+    log.undo_all(bm, sched.block_tables)
+    aborted = [r for r in sched.running
+               if sched.block_tables[r.req_id].num_blocks() == 0]
+    assert aborted == [r2]
+    for r in aborted:
+        sched.running.remove(r)
+        del sched.block_tables[r.req_id]
+        sched._free_slots.append(r.batch_slot)
+        r.batch_slot = None
+        sched.requeue_front(r)
+    assert bm.num_free == free_before
+    assert sorted(sched._free_slots) == slots_before
+    assert sched.waiting[0] is r2           # requeued at the front
+    assert r2.state is RequestState.WAITING
+    sched.check_consistent()
+    # the requeued request admits again on the next step
+    plan = sched.plan_step(log)
+    assert plan.prefill is r2
+    sched.check_consistent()
+
+
+def test_check_consistent_catches_corruption():
+    bm = BlockManager(8, 4)
+    sched = LocalScheduler(2, 32, bm)
+    log = BlockLog()
+    r = Request([1, 2, 3], 2)
+    sched.add_request(r)
+    log.begin_step()
+    sched.plan_step(log)
+    sched.check_consistent()
+    sched._free_slots.append(r.batch_slot)   # corrupt: slot double-owned
+    with pytest.raises(AssertionError, match="free and in use"):
+        sched.check_consistent()
+
+
+def test_sampling_per_row_positions_match_scalar():
+    """Vector step: each row draws from its own (seed, step) stream, so
+    a row's token is independent of its batch company — the property
+    cross-instance replay depends on."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(3, 16))
+    p = SamplingParams(temperature=0.7, top_p=0.9, seed=11)
+    batched = sample(logits, p, step=np.array([5, 9, 2]))
+    for i, pos in enumerate([5, 9, 2]):
+        solo = sample(logits[i:i + 1], p, step=pos)
+        assert batched[i] == solo[0]
