@@ -6,14 +6,20 @@ recovery policy the arbiter is forced to use:
 
 * ``revive``  — ReviveMoE in-place recovery (paper's contribution),
 * ``restart`` — drain-and-restart of the wounded instance (baseline),
-* ``spare``   — live migration onto a pre-warmed standby (FailSafe-style).
+* ``spare``   — live migration onto a pre-warmed standby (FailSafe-style
+  KV-block streaming; the wounded instance's reachable executors ship
+  their residents' live blocks, only dead-device requests re-prefill).
 
 A no-fault run provides the TTFT reference.  The figure of merit is p99
-TTFT *degradation* vs that baseline: restart stalls every request parked
-on the instance for a full relaunch, revive stalls them for a mostly
-precompiled recovery pipeline, spare pays one cross-instance re-prefill
-per in-flight request.  Goodput timelines (tokens delivered per virtual
-interval) show the same story over time.
+TTFT *degradation* vs that baseline.  Two extra sections stress the
+parts a single-fault trace cannot:
+
+* ``compound`` — correlated / multi-fault traces (two devices of the
+  same comm domain, and a second instance faulting while the first is
+  still recovering), with the arbiter left free to choose per fault.
+* ``prefix_sweep`` — migration cost vs prompt length: KV-block streaming
+  is ~flat in the prefix (a block copy), token-replay re-prefill grows
+  linearly with it; both paths are asserted token-exact.
 
 Every run appends to ``BENCH_fleet_slo.json`` via benchmarks.trajectory.
 """
@@ -62,18 +68,29 @@ def _percentile(xs: List[float], q: float) -> float:
 
 
 def _run_fleet(workdir: str, policy: Optional[str], n_requests: int,
-               rate: float) -> Dict:
-    """One fleet, one arrival trace, optionally one injected fault."""
+               rate: float, faults: Optional[List[Dict]] = None,
+               spares: Optional[int] = None) -> Dict:
+    """One fleet, one arrival trace, optionally injected faults.
+
+    ``faults``: explicit fault list [{"iid", "step", "pid", "component"}]
+    (defaults to the single canonical MoE fault when ``policy`` is set).
+    """
     traffic = PoissonTraffic(rate, _cfg().vocab_size, prompt_len=8,
                              max_new_tokens=12, seed=11,
                              limit=n_requests)
+    if faults is None and policy is not None:
+        faults = [{"iid": 0, "step": FAULT_STEP, "pid": FAULT_PID,
+                   "component": "moe"}]
+    if spares is None:
+        spares = 1 if policy == "spare" else 0
     fleet = build_fleet(_cfg(), _ecfg(workdir), instances=3,
-                        spares=(1 if policy == "spare" else 0),
-                        force_policy=policy, traffic=traffic)
-    if policy is not None:
-        fleet.instances[0].engine.injector.schedule(
-            FAULT_STEP, FAULT_PID, severity=Severity.L6,
-            error_type=ErrorType.HBM_ECC, component="moe", mid_step=True)
+                        spares=spares, force_policy=policy,
+                        traffic=traffic)
+    for f in faults or []:
+        fleet.instances[f["iid"]].engine.injector.schedule(
+            f["step"], f["pid"], severity=Severity.L6,
+            error_type=ErrorType.HBM_ECC, component=f["component"],
+            mid_step=True)
     timeline: List[Dict] = []
     prev_tokens = 0
     t_wall = time.perf_counter()
@@ -101,6 +118,115 @@ def _run_fleet(workdir: str, policy: Optional[str], n_requests: int,
     }
 
 
+# correlated / multi-fault traces (ROADMAP follow-up b): the arbiter is
+# left free to choose per fault.  pids: 0-1 attention, 2-3 MoE.
+COMPOUND_TRACES = {
+    # two devices in the same comm domain (one host/switch takes both):
+    # the MoE rank at step 10, then an attention rank of the *same*
+    # instance two steps later — mid-recovery of the first
+    "double_fault_same_domain": [
+        {"iid": 0, "step": 10, "pid": 3, "component": "moe"},
+        {"iid": 0, "step": 12, "pid": 1, "component": "attn"},
+    ],
+    # a second instance faults while the fleet is still absorbing the
+    # first instance's recovery
+    "fault_during_recovery": [
+        {"iid": 0, "step": 10, "pid": 3, "component": "moe"},
+        {"iid": 1, "step": 11, "pid": 1, "component": "attn"},
+    ],
+}
+
+
+def _sweep_engines(workdir: str):
+    """Two weight-identical engines sharing one compile cache: the
+    migration source and target of the prefix sweep."""
+    from repro.serving.engine import InferenceEngine
+    cfg = _cfg()
+    max_seq = 320
+    ecfg = EngineConfig(mode="collocated", num_dp=1, max_batch=2,
+                        max_seq=max_seq, block_size=16, num_blocks=48,
+                        workdir=workdir)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                     min_capacity=64))
+    src = InferenceEngine(cfg, dataclasses.replace(ecfg))
+    tgt = InferenceEngine(cfg, dataclasses.replace(ecfg))
+    return cfg, src, tgt
+
+
+def prefix_sweep(workdir: str, quick: bool = False) -> Dict:
+    """Migration cost vs prompt length: KV-block streaming vs re-prefill.
+
+    For each prefix length P, a request generated to mid-stream on the
+    source engine is migrated to the target both ways; the measured cost
+    is admission + the target's first step (decode-only when streamed, a
+    P-token prefill when replayed).  Both paths must continue the exact
+    token stream (position-seeded sampling), asserted per point.
+    """
+    prefixes = [16, 128] if quick else [16, 64, 128, 256]
+    reps = 2 if quick else 3
+    cfg, src, tgt = _sweep_engines(workdir)
+    rng = np.random.default_rng(17)
+
+    def migrate_once(prompt: List[int], stream: bool) -> Dict:
+        req = src.submit(prompt, max_new_tokens=6)
+        for _ in range(3):
+            src.step()
+        assert len(req.output_tokens) >= 2, "must be mid-generation"
+        pre_tokens = list(req.output_tokens)
+        exported = src.export_live_requests(with_kv=True)
+        (req2, kv), = exported
+        assert req2 is req
+        if not stream:
+            kv = None
+        t0 = time.perf_counter()
+        tgt.admit(req, kv=kv)
+        tgt.step()                       # decode-only vs P-token prefill
+        dt = time.perf_counter() - t0
+        assert len(req.output_tokens) == len(pre_tokens) + 1
+        tgt.run(max_steps=40)
+        assert req.state.value == "finished"
+        return {"s": dt, "tokens": list(req.output_tokens)}
+
+    def prompt_for(P: int) -> List[int]:
+        return list(rng.integers(0, cfg.vocab_size, P))
+
+    # warm every prefill bucket + the install/decode graphs off-clock
+    for P in prefixes:
+        migrate_once(prompt_for(P), stream=True)
+        migrate_once(prompt_for(P), stream=False)
+
+    points = []
+    for P in prefixes:
+        stream_runs, replay_runs = [], []
+        for _ in range(reps):
+            prompt = prompt_for(P)
+            s = migrate_once(prompt, stream=True)
+            r = migrate_once(prompt, stream=False)
+            # parity: KV-stream and re-prefill continue identical tokens
+            # (same prompt, position-seeded sampling — the token stream
+            # must be independent of the migration mechanism)
+            assert s["tokens"] == r["tokens"], (P, s["tokens"], r["tokens"])
+            stream_runs.append(s["s"])
+            replay_runs.append(r["s"])
+        points.append({"prefix": P,
+                       "stream_s": round(min(stream_runs), 5),
+                       "replay_s": round(min(replay_runs), 5)})
+    lo, hi = points[0], points[-1]
+    stream_growth = hi["stream_s"] - lo["stream_s"]
+    replay_growth = hi["replay_s"] - lo["replay_s"]
+    return {
+        "block_size": 16,
+        "points": points,
+        "stream_growth_s": round(stream_growth, 5),
+        "replay_growth_s": round(replay_growth, 5),
+        # streamed takeover must not inherit re-prefill's linear term
+        "stream_flat_vs_replay_linear": bool(
+            replay_growth > 0
+            and stream_growth < 0.5 * replay_growth),
+    }
+
+
 def run(quick: bool = False) -> Dict:
     n_requests = 24 if quick else 48
     rate = 60.0          # open-loop: arrivals do not wait for recovery
@@ -123,6 +249,17 @@ def run(quick: bool = False) -> Dict:
     out["revive_beats_restart"] = bool(
         out["policies"]["revive"]["p99_degradation_s"]
         < out["policies"]["restart"]["p99_degradation_s"])
+    # compound failures: arbiter free, one warm spare available
+    out["compound"] = {}
+    for name, faults in COMPOUND_TRACES.items():
+        res = _run_fleet(workdir, None, n_requests, rate,
+                         faults=faults, spares=1)
+        res["p99_degradation_s"] = round(
+            res["p99_ttft_s"] - base["p99_ttft_s"], 4)
+        res["all_finished"] = bool(res["finished"] == res["n"])
+        out["compound"][name] = res
+    out["prefix_sweep"] = prefix_sweep(
+        tempfile.mkdtemp(prefix="bench_prefix_sweep_"), quick=quick)
     return out
 
 
@@ -139,6 +276,12 @@ def save_json(out: Dict, path: str = BENCH_PATH) -> None:
     base = dict(slim["baseline"] if "baseline" in out else {})
     base.pop("goodput_timeline", None)
     slim["baseline"] = base
+    if "compound" in out:
+        slim["compound"] = {}
+        for name, res in out["compound"].items():
+            res = dict(res)
+            res.pop("goodput_timeline", None)
+            slim["compound"][name] = res
     append_record(path, slim)
 
 
@@ -165,10 +308,28 @@ def print_table(out: Dict) -> None:
     for name, res in out["policies"].items():
         for line in res["arbiter_log"]:
             print(f"    [{name}] {line}")
+    if "compound" in out:
+        print("\n# Compound failures (arbiter free, 1 warm spare)")
+        for name, res in out["compound"].items():
+            print(f"  {name:26s} {res['finished']:3d}/{res['n']:<3d} "
+                  f"p99 degr {res['p99_degradation_s'] * 1e3:7.0f}ms")
+            for line in res["arbiter_log"]:
+                print(f"    {line}")
+    if "prefix_sweep" in out:
+        sw = out["prefix_sweep"]
+        print("\n# Migration cost vs prefix length "
+              "(KV-block stream vs re-prefill, token-exact both ways)")
+        print(f"  {'prefix':>7s} {'stream':>10s} {'re-prefill':>11s}")
+        for pt in sw["points"]:
+            print(f"  {pt['prefix']:7d} {pt['stream_s'] * 1e3:8.1f}ms "
+                  f"{pt['replay_s'] * 1e3:9.1f}ms")
+        flag = "yes" if sw["stream_flat_vs_replay_linear"] else "NO (!)"
+        print(f"  stream ~flat while re-prefill grows with prefix: {flag}")
 
 
 if __name__ == "__main__":
-    out = run()
+    import sys
+    out = run(quick="--quick" in sys.argv[1:])
     print_table(out)
     save_json(out)
     print(f"\nappended to {BENCH_PATH}")

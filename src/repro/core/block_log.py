@@ -29,14 +29,41 @@ class BlockLog:
     def __init__(self):
         self._ops: List[BlockOp] = []
         self.steps_committed = 0
+        self._pool_snapshot = None
 
     def begin_step(self) -> None:
         """Previous step fully completed -> its log is no longer needed."""
         self._ops.clear()
+        self._pool_snapshot = None
         self.steps_committed += 1
 
     def record(self, op: BlockOp) -> None:
         self._ops.append(op)
+
+    # -- pool consistency (the device-side half of §3.3) ----------------------
+
+    def snapshot_pools(self, cache) -> None:
+        """Remember the paged-cache value at the step boundary.  The cache
+        is a pytree of immutable jax arrays, so this is an O(1) reference,
+        not a copy — the functional analogue of the block-op undo records:
+        restoring it discards every in-flight pool write exactly.
+
+        Memory note: between the step's first pool update and ``commit``
+        (one ``compute`` call — commit follows immediately), the pre-step
+        buffers stay pinned alongside the updated ones.  A functional
+        update holds input+output live anyway, so the snapshot adds no
+        extra peak today, but it does forbid donating/aliasing the pool
+        buffers into the update.  If that aliasing is ever wanted on TPU,
+        replace this with a row-level undo of just the step's write set
+        (write_bid/write_off + the prefill's block ids, all known at plan
+        time) — see ROADMAP paged-KV follow-ups."""
+        self._pool_snapshot = cache
+
+    def take_pool_snapshot(self):
+        """The cache value to restore on rollback (None once committed)."""
+        snap = self._pool_snapshot
+        self._pool_snapshot = None
+        return snap
 
     def __len__(self) -> int:
         return len(self._ops)

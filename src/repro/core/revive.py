@@ -124,16 +124,9 @@ class RecoveryManager:
             report.actions.append(f"isolated device {event.rank} "
                                   f"({device.role})")
 
-        # ② sequence state recovery (attention ranks)
-        if failed_dp is not None and is_attn:
-            with _T(report, "other"):
-                reqs = failed_dp.scheduler.drain()
-                report.migrated = self._migrate(reqs, exclude=failed_dp)
-                report.actions.append(
-                    f"migrated {report.migrated} sequences "
-                    f"(partial recomputation)")
-
-        # ③ block-table recovery on all surviving executors
+        # ③ block-table + pool recovery on all surviving executors —
+        # BEFORE any migration, so streamed KV blocks land on targets
+        # whose tables and pools already agree (rollback-then-migrate)
         with _T(report, "other"):
             undone = 0
             for ex in eng.dp_executors:
@@ -141,6 +134,17 @@ class RecoveryManager:
                     undone += ex.rollback_inflight()
             report.blocks_rolled_back = undone
             report.actions.append(f"rolled back {undone} block ops")
+
+        # ② sequence state recovery (attention ranks).  The failed rank's
+        # device memory is gone, so its KV cannot stream: token-replay
+        # re-prefill is the (verified) fallback here.
+        if failed_dp is not None and is_attn:
+            with _T(report, "other"):
+                reqs = failed_dp.scheduler.drain()
+                report.migrated, _ = self._migrate(reqs, exclude=failed_dp)
+                report.actions.append(
+                    f"migrated {report.migrated} sequences "
+                    f"(partial recomputation)")
 
         # ④ weight integrity
         role_switch_pid = None
@@ -198,21 +202,39 @@ class RecoveryManager:
 
     # -- helpers ----------------------------------------------------------------------
 
-    def _migrate(self, reqs, exclude) -> int:
+    def _migrate(self, reqs, exclude):
+        """Re-home sequences onto healthy ranks.  ``reqs`` items may be
+        bare Requests (replay re-prefill — the source device is dead) or
+        ``(req, KVBlocks|None)`` pairs from a healthy donor
+        (``drop_attention_state(collect_kv=True)``): streamed blocks
+        install directly, everything else re-prefills.
+
+        Returns ``(migrated, streamed)`` counts."""
         eng = self.engine
         healthy = {ex.dp_rank: ex.scheduler.num_requests
                    for ex in eng.dp_executors
                    if ex.alive and ex.cache is not None and ex is not exclude}
-        live = [r for r in reqs if r.state != RequestState.FINISHED]
+        items = [(r, None) if not isinstance(r, tuple) else r for r in reqs]
+        live = [(r, kv) for r, kv in items
+                if r.state != RequestState.FINISHED]
         if not live:
-            return 0
-        for req, rank in plan_migration(live, healthy):
-            prepare_for_migration(req)
+            return 0, 0
+        payloads = dict((id(r), kv) for r, kv in live)
+        streamed = 0
+        for req, rank in plan_migration([r for r, _ in live], healthy):
+            kv = payloads[id(req)]
+            prepare_for_migration(req, streamed=kv is not None)
             target = next(ex for ex in eng.dp_executors
                           if ex.dp_rank == rank)
+            if kv is not None and target.import_kv_blocks(req, kv):
+                streamed += 1
+                continue
+            if kv is not None:
+                from repro.core.migration import charge_replay
+                charge_replay(req)   # stream install failed: replay
             req.dp_rank = rank
             target.scheduler.add_request(req)
-        return len(live)
+        return len(live), streamed
 
     def _recover_moe_weights(self, event, report, failed_dp, failed_moe
                              ) -> Optional[MoERecoveryPlan]:
@@ -264,14 +286,17 @@ class RecoveryManager:
         elif plan.kind is MoERecoveryKind.ROLE_SWITCH:
             donor_ex = eng.dp_executors[plan.donor_rank]
             with _T(report, "role_switch"):
-                # migrate the donor's requests, drop its attention state
-                reqs = donor_ex.drop_attention_state()
-                n = self._migrate(reqs, exclude=donor_ex)
+                # migrate the donor's residents — the donor device is
+                # healthy, so their KV blocks *stream* to the targets
+                # instead of re-prefilling — then drop its attention duty
+                reqs = donor_ex.drop_attention_state(collect_kv=True)
+                n, n_streamed = self._migrate(reqs, exclude=donor_ex)
                 report.migrated += n
                 donor_ex.ep_rank = failed_ep_rank
                 report.actions.append(
                     f"role switch: dp{plan.donor_rank} -> moe ep-rank "
-                    f"{failed_ep_rank}; migrated {n} of its sequences")
+                    f"{failed_ep_rank}; migrated {n} of its sequences "
+                    f"({n_streamed} KV-streamed)")
             with _T(report, "generator"):
                 # the lost experts' only copies are gone: load from disk
                 from repro.serving.weights_util import (
@@ -328,7 +353,7 @@ class RecoveryManager:
                 break
         assert failed_ep_rank is not None
         t0 = time.perf_counter()
-        reqs = donor_ex.drop_attention_state()
+        reqs = donor_ex.drop_attention_state(collect_kv=True)
         self._migrate(reqs, exclude=donor_ex)
         donor_ex.ep_rank = failed_ep_rank
         timings["role_switch"] = time.perf_counter() - t0

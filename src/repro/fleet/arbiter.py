@@ -44,10 +44,27 @@ class _RunningMean:
 
 
 class CostModel:
-    """Per-policy stall estimates (seconds), measurement-fed."""
+    """Per-policy stall estimates (seconds), measurement-fed.
+
+    Spare substitution is priced on its *actual* migration mechanics:
+    requests whose executors are still reachable stream their KV blocks
+    (O(bytes) copy, per-block rate), the rest re-prefill from token
+    replay (per-token rate) — so the estimate stays flat in prefix
+    length exactly when the streamed path is available.
+
+    Revive is priced on stall *and quality*: when the failed rank's
+    experts have no surviving replica, revive serves with them masked
+    until a (background) role switch restores the weights — degraded
+    answers are a real client cost, converted to stall-equivalent
+    seconds via ``degraded_quality_weight_s`` (the stall a client would
+    trade for full-quality service of one request, scaled by the masked
+    fraction).
+    """
 
     def __init__(self, init_timings: Dict[str, float], *,
                  per_token_prefill_s: float = 2e-4,
+                 per_block_stream_s: float = 2e-5,
+                 degraded_quality_weight_s: float = 1.0,
                  spare_opportunity_cost_s: Optional[float] = None):
         restart_seed = sum(init_timings.values()) or 1.0
         # revive skips engine/executor/weight re-init; it pays rollback +
@@ -60,8 +77,11 @@ class CostModel:
         self.revive = _RunningMean(revive_seed)
         self.restart = _RunningMean(restart_seed)
         # spare substitution: the swap itself is a routing-table update;
-        # the cost is re-prefilling the migrated tokens on the standby
+        # migrated state arrives by KV-block stream (per block) or by
+        # re-prefill of the replayed tokens (per token)
         self.per_token_prefill_s = per_token_prefill_s
+        self.per_block_stream_s = per_block_stream_s
+        self.degraded_quality_weight_s = degraded_quality_weight_s
         self.spare_swap = _RunningMean(0.0)
         # consuming a standby is not free even if the swap is fast: the
         # fleet loses a spare until a replacement is built.  Expressed in
@@ -84,9 +104,16 @@ class CostModel:
     def est_restart_s(self) -> float:
         return self.restart.value
 
-    def est_spare_s(self, tokens_to_reprefill: int) -> float:
+    def est_spare_s(self, tokens_to_reprefill: int,
+                    blocks_to_stream: int = 0) -> float:
         return (self.spare_swap.value
-                + tokens_to_reprefill * self.per_token_prefill_s)
+                + tokens_to_reprefill * self.per_token_prefill_s
+                + blocks_to_stream * self.per_block_stream_s)
+
+    def quality_cost_s(self, masked_fraction: float) -> float:
+        """Stall-equivalent price of serving one request with a fraction
+        of the experts masked (0.0 when redundancy covers the fault)."""
+        return masked_fraction * self.degraded_quality_weight_s
 
     # -- measurement feedback ----------------------------------------------------
 
@@ -96,9 +123,12 @@ class CostModel:
     def observe_restart(self, elapsed_s: float) -> None:
         self.restart.observe(elapsed_s)
 
-    def observe_spare(self, swap_s: float, tokens: int) -> None:
+    def observe_spare(self, swap_s: float, tokens: int,
+                      streamed_blocks: int = 0) -> None:
         self.spare_swap.observe(max(0.0, swap_s
-                                    - tokens * self.per_token_prefill_s))
+                                    - tokens * self.per_token_prefill_s
+                                    - streamed_blocks
+                                    * self.per_block_stream_s))
 
 
 @dataclass
@@ -144,10 +174,29 @@ class RecoveryArbiter:
         n_inflight = max(1, inst.load)
         tokens = sum(r.num_tokens for r in inst.engine.all_requests
                      if r.state.value not in ("finished", "failed"))
+        # spare substitution streams KV blocks off still-reachable
+        # executors and replays only the rest; a lost instance streams
+        # nothing (device memory is gone with the host)
+        split = getattr(inst.engine, "streamable_split", None)
+        if split is not None and not instance_lost:
+            stream_tokens, replay_tokens = split()
+        else:
+            stream_tokens, replay_tokens = 0, tokens
+        block_size = getattr(getattr(inst.engine, "ecfg", None),
+                             "block_size", 16)
+        stream_blocks = -(-stream_tokens // block_size)
+        # revive may have to serve with the fault's experts masked —
+        # price that quality loss, not just the stall
+        mask_frac = 0.0
+        predict = getattr(inst.engine, "predict_masked_fraction", None)
+        if predict is not None and event is not None and not instance_lost:
+            mask_frac = predict(event.rank)
         est = {
-            "revive": self.cost.est_revive_s() * n_inflight,
+            "revive": (self.cost.est_revive_s()
+                       + self.cost.quality_cost_s(mask_frac)) * n_inflight,
             "restart": self.cost.est_restart_s() * n_inflight,
-            "spare": (self.cost.est_spare_s(tokens) * n_inflight
+            "spare": (self.cost.est_spare_s(replay_tokens, stream_blocks)
+                      * n_inflight
                       + self.cost.spare_opportunity_cost_s),
         }
         feasible = dict(est)
@@ -167,6 +216,9 @@ class RecoveryArbiter:
             if reason is None:
                 reason = (f"min expected stall over {n_inflight} "
                           f"in-flight requests")
+                if mask_frac > 0.0:
+                    reason += (f"; revive priced with {mask_frac:.0%} "
+                               f"experts masked")
         dec = ArbiterDecision(policy=policy, instance_id=inst.iid,
                               event=event, est_cost=est, reason=reason)
         self.decisions.append(dec)

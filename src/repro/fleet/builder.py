@@ -23,7 +23,12 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
                 instances: int = 2, spares: int = 0,
                 force_policy: Optional[str] = None,
                 soft_patience: int = 1,
-                traffic=None) -> FleetRouter:
+                traffic=None, replenish_spares: bool = False,
+                kv_stream: bool = True) -> FleetRouter:
+    """``replenish_spares`` turns on background standby repair (one
+    rebuild per router tick after an activation); ``kv_stream=False``
+    forces token-replay re-prefill on every migration (the verified
+    fallback path)."""
     if instances < 1:
         raise ValueError(f"instances must be >= 1, got {instances!r}")
     if spares < 0:
@@ -36,9 +41,9 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
     members = [FleetInstance(i, _engine()) for i in range(instances)]
     pool = SparePool(
         lambda iid: FleetInstance(iid, _engine(), InstanceState.SPARE),
-        size=spares) if spares else None
+        size=spares, auto_replenish=replenish_spares) if spares else None
     arbiter = RecoveryArbiter(
         CostModel(members[0].engine.init_timings),
         force_policy=force_policy, soft_patience=soft_patience)
     return FleetRouter(members, spares=pool, arbiter=arbiter,
-                       traffic=traffic)
+                       traffic=traffic, kv_stream=kv_stream)

@@ -63,12 +63,13 @@ class FleetInstance:
         req.instance_id = self.iid
         return req
 
-    def admit(self, req: Request) -> Request:
-        """Cross-instance admission of a migrated request."""
+    def admit(self, req: Request, kv=None) -> Request:
+        """Cross-instance admission of a migrated request; a KVBlocks
+        payload streams the live prefix in (no re-prefill on arrival)."""
         if req.instance_id is not None and req.instance_id != self.iid:
             req.cross_instance_migrations += 1
         req.instance_id = self.iid
-        return self.engine.admit(req)
+        return self.engine.admit(req, kv=kv)
 
     # -- arbitration hook --------------------------------------------------------
 
@@ -85,8 +86,11 @@ class FleetInstance:
             return []
         return self.engine.step()
 
-    def export_requests(self) -> List[Request]:
-        return self.engine.export_live_requests()
+    def export_requests(self, with_kv: bool = False):
+        """Drain every unfinished request; ``with_kv`` returns
+        ``[(req, KVBlocks|None)]`` with live blocks extracted from every
+        still-reachable executor (streamed takeover)."""
+        return self.engine.export_live_requests(with_kv=with_kv)
 
     def restart(self) -> float:
         """Drain-and-restart baseline: the whole instance relaunches

@@ -37,9 +37,13 @@ class FleetRouter:
     def __init__(self, instances: List[FleetInstance], *,
                  spares: Optional[SparePool] = None,
                  arbiter: Optional[RecoveryArbiter] = None,
-                 traffic=None):
+                 traffic=None, kv_stream: bool = True):
+        """``kv_stream=False`` forces the token-replay re-prefill path on
+        every migration (the verified fallback — used by the fleet_slo
+        prefix sweep to measure what streaming saves)."""
         if not instances:
             raise ValueError("FleetRouter needs at least one instance")
+        self.kv_stream = kv_stream
         self.instances: Dict[int, FleetInstance] = {
             i.iid: i for i in instances}
         if len(self.instances) != len(instances):
@@ -179,19 +183,35 @@ class FleetRouter:
             self._freeze(inst, elapsed)
             return
         t0 = time.perf_counter()
-        reqs = inst.export_requests()
-        tokens = sum(r.num_tokens for r in reqs)
-        for r in reqs:
-            spare.admit(r)
+        # standby sync (FailSafe): every request whose executor is still
+        # reachable streams its live KV blocks to the spare — takeover
+        # cost is a block copy, flat in prefix length; the rest (on the
+        # failed device, or still queued) re-prefill from token replay
+        exported = inst.export_requests(with_kv=self.kv_stream)
+        if not self.kv_stream:
+            exported = [(r, None) for r in exported]
+        streamed_tokens = replay_tokens = streamed_blocks = 0
+        for r, kv in exported:
+            spare.admit(r, kv=kv)
             self.meta[r.req_id]["instances"].append(spare.iid)
+            # the install is all-or-nothing: a streamed request is RUNNING
+            # on arrival, a fallback-to-replay one re-enters WAITING — so
+            # the cost feedback reflects what actually happened
+            if kv is not None and r.state is RequestState.RUNNING:
+                streamed_tokens += kv.tokens_streamed
+                streamed_blocks += kv.num_blocks
+            else:
+                replay_tokens += r.num_tokens
         swap_s = time.perf_counter() - t0
-        self.arbiter.cost.observe_spare(swap_s, tokens)
+        self.arbiter.cost.observe_spare(swap_s, replay_tokens,
+                                        streamed_blocks)
         inst.decommission(reason)
         self._enroll(spare)
         self.log.append(
             f"[router] spare {spare.iid} substituted for {inst.iid} "
-            f"({len(reqs)} requests, {tokens} tokens to re-prefill, "
-            f"swap {swap_s * 1e3:.1f}ms)")
+            f"({len(exported)} requests: {streamed_tokens} tokens / "
+            f"{streamed_blocks} blocks KV-streamed, {replay_tokens} "
+            f"tokens to re-prefill, swap {swap_s * 1e3:.1f}ms)")
 
     def _execute(self, inst: FleetInstance, dec: ArbiterDecision) -> None:
         if dec.policy == "restart":
@@ -247,6 +267,18 @@ class FleetRouter:
                 self.log.append(dec.summary())
                 if dec.policy == "spare":
                     self._substitute(inst, "straggler: substituted")
+        # background capacity repair: rebuild at most one consumed
+        # standby per tick.  Provisioning happens on a fresh host, off
+        # the serving path — it consumes wall time here (we are one
+        # process) but no *virtual* time: serving instances are unfrozen
+        # and the clock advances by their step durations only.
+        if self.spares is not None:
+            built = self.spares.maybe_replenish()
+            if built is not None:
+                self.log.append(
+                    f"[router] spare pool replenished: instance "
+                    f"{built.iid} warm "
+                    f"({self.spares.available}/{self.spares.target_size})")
         inc = max(max(step_durs), _MIN_TICK_S)
         # discrete-event fast-forward: if every available instance is
         # idle but work is parked behind a freeze (e.g. a restarting

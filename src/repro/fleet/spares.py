@@ -16,15 +16,22 @@ from repro.fleet.instance import FleetInstance, InstanceState
 
 class SparePool:
     def __init__(self, factory: Callable[[int], FleetInstance],
-                 size: int, first_iid: int = 1000):
+                 size: int, first_iid: int = 1000,
+                 auto_replenish: bool = False):
         """factory(iid) must return a built, SPARE-state FleetInstance.
 
         ``first_iid`` namespaces spare ids away from the serving set.
+        ``auto_replenish``: after an activation, rebuild a standby in the
+        background (one per router tick) instead of letting the pool
+        shrink — the fleet's steady-state spare capacity self-heals.
         """
         self._factory = factory
         self._next_iid = first_iid
+        self.target_size = size
+        self.auto_replenish = auto_replenish
         self.warm: List[FleetInstance] = []
         self.activations = 0
+        self.replenishments = 0
         self.warmup_s: List[float] = []
         for _ in range(size):
             self._provision()
@@ -51,6 +58,21 @@ class SparePool:
         self.activations += 1
         return inst
 
+    @property
+    def deficit(self) -> int:
+        return max(0, self.target_size - self.available)
+
+    def maybe_replenish(self) -> Optional[FleetInstance]:
+        """Background capacity repair, called once per router tick:
+        rebuild at most one standby when the pool is below target.  The
+        build runs on a new host, off the serving path, so it costs no
+        virtual fleet time."""
+        if not self.auto_replenish or not self.deficit:
+            return None
+        inst = self._provision()
+        self.replenishments += 1
+        return inst
+
     def replenish(self) -> FleetInstance:
-        """Provision a fresh standby (background capacity repair)."""
+        """Provision a fresh standby immediately (manual capacity repair)."""
         return self._provision()

@@ -62,12 +62,15 @@ def moe_dispatch_ffn_combine(x, gate_w, up_w, down_w, weights, phys, alive,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
-                    use_pallas: bool = True):
+                    start_lens=None, use_pallas: bool = True):
+    """Decode attention over a paged pool.  ``start_lens`` (optional,
+    (B,)) is the first valid position per sequence — the sliding-window
+    lower bound; None means attend from position 0."""
     if not use_pallas:
         return ref.paged_attention_ref(q, k_pool, v_pool, block_table,
-                                       seq_lens)
+                                       seq_lens, start_lens)
     return paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens,
-                                  interpret=_on_cpu())
+                                  start_lens, interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -26,7 +26,7 @@ from repro.kernels.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+def _paged_attn_kernel(bt_ref, sl_ref, st_ref, q_ref, k_ref, v_ref, o_ref,
                        acc_ref, m_ref, l_ref, *, bs: int, scale: float):
     b = pl.program_id(0)
     j = pl.program_id(1)
@@ -46,7 +46,8 @@ def _paged_attn_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
     G = H // Hkv
 
     pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < sl_ref[b]                           # (1, bs)
+    # valid window: [start, len) — start > 0 models a sliding window
+    valid = (pos < sl_ref[b]) & (pos >= st_ref[b])    # (1, bs)
 
     # per-kv-head matmuls: (G, Dh) x (Dh, bs) -> (G, bs)
     qg = q.reshape(Hkv, G, Dh)
@@ -78,27 +79,31 @@ def _paged_attn_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens, *,
-                           interpret: bool = False):
+def paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens,
+                           start_lens=None, *, interpret: bool = False):
     """q: (B,H,Dh); pools: (nb, bs, Hkv, Dh); block_table: (B, max_blk);
-    seq_lens: (B,) -> (B, H, Dh)."""
+    seq_lens: (B,); start_lens: optional (B,) first valid position
+    (sliding window) -> (B, H, Dh)."""
     B, H, Dh = q.shape
     nb, bs, Hkv, _ = k_pool.shape
     max_blk = block_table.shape[1]
     scale = 1.0 / (Dh ** 0.5)
+    if start_lens is None:
+        start_lens = jnp.zeros_like(seq_lens)
 
     kernel = functools.partial(_paged_attn_kernel, bs=bs, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, max_blk),
         in_specs=[
-            pl.BlockSpec((1, H, Dh), lambda b, j, bt, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H, Dh), lambda b, j, bt, sl, st: (b, 0, 0)),
             pl.BlockSpec((1, bs, Hkv, Dh),
-                         lambda b, j, bt, sl: (bt[b, j], 0, 0, 0)),
+                         lambda b, j, bt, sl, st: (bt[b, j], 0, 0, 0)),
             pl.BlockSpec((1, bs, Hkv, Dh),
-                         lambda b, j, bt, sl: (bt[b, j], 0, 0, 0)),
+                         lambda b, j, bt, sl, st: (bt[b, j], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, Dh), lambda b, j, bt, sl: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, Dh),
+                               lambda b, j, bt, sl, st: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((H, Dh), jnp.float32),
             pltpu.VMEM((H, 1), jnp.float32),
@@ -113,4 +118,4 @@ def paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
-      q, k_pool, v_pool)
+      start_lens.astype(jnp.int32), q, k_pool, v_pool)

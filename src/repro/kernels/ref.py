@@ -64,12 +64,14 @@ def moe_fused_ref(x, gate_w, up_w, down_w, weights, phys, alive, *,
     return y
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens):
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
+                        start_lens=None):
     """Paged GQA decode attention oracle.
 
     q: (B, H, Dh); pools: (num_blocks, bs, Hkv, Dh);
     block_table: (B, max_blk) int32; seq_lens: (B,) int32 — number of valid
-    tokens (cache positions 0..len-1).  Returns (B, H, Dh).
+    tokens (cache positions 0..len-1); start_lens: optional (B,) int32 —
+    first valid position (sliding window: len - window).  Returns (B, H, Dh).
     """
     B, H, Dh = q.shape
     nb, bs, Hkv, _ = k_pool.shape
@@ -84,8 +86,14 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens):
                    preferred_element_type=jnp.float32)
     s = s / jnp.sqrt(jnp.float32(Dh))
     pos = jnp.arange(max_blk * bs)[None, :]
-    s = jnp.where((pos < seq_lens[:, None])[:, None, None, :], s, NEG_INF)
+    valid = pos < seq_lens[:, None]
+    if start_lens is not None:
+        valid &= pos >= start_lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (seq_len == 0, e.g. an idle batch slot): the
+    # uniform softmax over -inf rows would average garbage; zero them
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, H, Dh).astype(q.dtype)

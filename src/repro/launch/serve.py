@@ -34,7 +34,9 @@ def _run_fleet(args, cfg) -> int:
           f"{args.spares} spare(s)")
     fleet = build_fleet(cfg, ec, instances=args.fleet,
                         spares=args.spares,
-                        force_policy=args.force_policy, traffic=traffic)
+                        force_policy=args.force_policy, traffic=traffic,
+                        replenish_spares=args.replenish_spares,
+                        kv_stream=not args.no_kv_stream)
     if args.inject_fault:
         pid = (args.num_dp if args.inject_fault == "moe"
                and args.mode == "disaggregated" else 1)
@@ -91,6 +93,12 @@ def main(argv=None):
     ap.add_argument("--lose-instance", type=int, default=None,
                     metavar="IID", help="inject a full-instance loss "
                     "(fleet mode)")
+    ap.add_argument("--replenish-spares", action="store_true",
+                    help="rebuild consumed standbys in the background "
+                    "(fleet mode)")
+    ap.add_argument("--no-kv-stream", action="store_true",
+                    help="force token-replay re-prefill on migration "
+                    "(disable KV-block streaming)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_smoke_config

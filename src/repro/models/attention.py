@@ -5,9 +5,11 @@ in pure JAX so peak memory stays bounded at 32k context: the (Sq, Skv)
 score matrix is never materialized.  Decode paths operate against a
 (ring-buffered when windowed) KV cache and update it in place.
 
-The Pallas `paged_attention` kernel in ``repro.kernels`` is the TPU-native
-decode hot path; these jnp implementations are the reference semantics and
-the default compiled path.
+Serving decode runs against paged block pools (``gqa_decode_paged`` /
+``mla_decode_paged`` over ``ops.paged_attention`` — Pallas kernel on TPU,
+jnp oracle on CPU); the ring-buffer decode here is the reference
+semantics the paged path is proven against, and remains the dry-run /
+training-eval path.
 """
 from __future__ import annotations
 
@@ -227,6 +229,107 @@ def gqa_decode(p, cfg: ModelConfig, x, cache: GQACache, pos, *, use_rope=True):
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, H * Dh).astype(x.dtype)
     return out @ p["wo"], GQACache(k_cache, v_cache)
+
+
+def gqa_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype=jnp.float32):
+    """One layer's paged K/V pools: (num_blocks, block_size, Hkv, Dh)."""
+    Dh = cfg.resolved_head_dim()
+    shape = (num_blocks, block_size, cfg.num_kv_heads, Dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _window_starts(cfg: ModelConfig, seq_lens):
+    if not cfg.sliding_window:
+        return None
+    return jnp.maximum(seq_lens - cfg.sliding_window, 0)
+
+
+def gqa_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
+                     use_pallas: bool = False, use_rope=True):
+    """One-token decode against paged K/V pools (one layer).
+
+    x: (B, D); pools: {"k","v"} (nb, bs, Hkv, Dh); page: the per-step
+    paging arrays — ``tables`` (B, max_blk), ``seq_lens`` (B,) valid
+    length *including* the incoming token, ``write_bid``/``write_off``
+    (B,) the physical slot position ``seq_lens - 1`` lands in (idle batch
+    slots point at the trash block).
+    """
+    from repro.kernels import ops
+    B, D = x.shape
+    Dh = cfg.resolved_head_dim()
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    pos = page["seq_lens"] - 1
+
+    q = (x @ p["wq"]).reshape(B, H, Dh)
+    k = (x @ p["wk"]).reshape(B, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, Hkv, Dh)
+    if use_rope:
+        sin, cos = rope_sincos(pos, Dh, cfg.rope_theta)
+        q = apply_rope(q, sin[:, None, :], cos[:, None, :])
+        k = apply_rope(k, sin[:, None, :], cos[:, None, :])
+
+    k_pool = pools["k"].at[page["write_bid"], page["write_off"]].set(
+        k.astype(pools["k"].dtype))
+    v_pool = pools["v"].at[page["write_bid"], page["write_off"]].set(
+        v.astype(pools["v"].dtype))
+    out = ops.paged_attention(q, k_pool, v_pool, page["tables"],
+                              page["seq_lens"],
+                              _window_starts(cfg, page["seq_lens"]),
+                              use_pallas=use_pallas)
+    y = out.reshape(B, H * Dh).astype(x.dtype) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def mla_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype=jnp.float32):
+    """One layer's paged latent pool: (nb, bs, 1, R + dr).
+
+    MLA decode attends in the latent space, so one fused pool holds
+    ``concat([c_kv, k_rope])`` per token (the Hkv=1 axis matches the
+    paged-attention kernel's pool layout).
+    """
+    m = cfg.mla
+    shape = (num_blocks, block_size, 1,
+             m.kv_lora_rank + m.qk_rope_head_dim)
+    return {"ckr": jnp.zeros(shape, dtype)}
+
+
+def mla_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
+                     use_pallas: bool = False):
+    """Absorbed-matmul MLA decode over the fused latent pool.
+
+    Scores are ``q_lat . c_kv + q_rope . k_rope``, which is exactly one
+    paged-attention call on the concatenated pool; the value readout uses
+    the same pool (output columns beyond R are discarded).
+    """
+    from repro.kernels import ops
+    B, D = x.shape
+    m = cfg.mla
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    R = m.kv_lora_rank
+    pos = page["seq_lens"] - 1
+
+    q_nope, q_rope, c_kv, k_rope, sin, cos = _mla_qkr(p, cfg, x, pos)
+    q_rope = apply_rope(q_rope, sin[:, None, :], cos[:, None, :])  # (B,H,dr)
+    k_rope = apply_rope(k_rope, sin, cos)                          # (B,dr)
+    q_lat = jnp.einsum("bhd,hdr->bhr", q_nope, p["wuk"])           # (B,H,R)
+
+    pool = pools["ckr"]
+    token = jnp.concatenate([c_kv, k_rope], axis=-1)               # (B,R+dr)
+    pool = pool.at[page["write_bid"], page["write_off"], 0].set(
+        token.astype(pool.dtype))
+    # the kernel scales by 1/sqrt(R+dr); MLA wants 1/sqrt(dn+dr)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1) * (
+        math.sqrt(R + dr) / math.sqrt(dn + dr))
+    out = ops.paged_attention(q_eff.astype(pool.dtype), pool, pool,
+                              page["tables"], page["seq_lens"],
+                              _window_starts(cfg, page["seq_lens"]),
+                              use_pallas=use_pallas)
+    o_lat = out[..., :R]                                           # (B,H,R)
+    o = jnp.einsum("bhr,hrv->bhv", o_lat.astype(x.dtype), p["wuv"])
+    return o.reshape(B, H * dv) @ p["wo"], {"ckr": pool}
 
 
 def gqa_cross_decode(p, cfg: ModelConfig, x, ck, cv, kv_valid):

@@ -8,8 +8,16 @@ iterated with ``lax.scan`` (compile time stays O(1) in depth for the 61-96
 layer configs).  Heterogeneous-depth families (MoE first-k-dense, Jamba
 periods) use one stack per homogeneous group.
 
-Decode caches are ring buffers (window = sliding_window or max_seq), so
-the same code path serves decode_32k and long_500k.
+Two decode-cache representations:
+
+* **Paged** (``init_paged_cache``/``prefill_paged``/``decode_step_paged``)
+  — per-layer block pools addressed through block tables; the serving
+  engine's only compiled cache.  Attention state has no batch axis
+  (requests own blocks), recurrent SSM state stays per-slot.
+* **Ring** (``init_cache``/``prefill``/``decode_step``) — per-slot ring
+  buffers (window = sliding_window or max_seq); the reference decode
+  semantics used by dry-runs/training-eval and the parity oracle for the
+  paged path (tests/test_paged_serving.py).
 """
 from __future__ import annotations
 
@@ -191,7 +199,7 @@ class Model:
 
     def _block_fwd(self, p, x, positions, *, mixer, ffn_kind, runtime, cap,
                    causal=True, enc_out=None, enc_positions=None,
-                   build_cache=False, max_seq=0):
+                   build_cache=False, max_seq=0, paged=False):
         """Returns (x, cache_entry, aux)."""
         cfg = self.cfg
         aux = 0.0
@@ -200,16 +208,16 @@ class Model:
         if mixer == "attn":
             if cfg.attention_type == "mla":
                 if build_cache:
-                    out, cache_entry = self._mla_fwd_cache(p["mixer"], h,
-                                                           positions, max_seq)
+                    out, cache_entry = self._mla_fwd_cache(
+                        p["mixer"], h, positions, max_seq, paged=paged)
                 else:
                     out = A.mla_forward(p["mixer"], cfg, h, positions,
                                         causal=causal,
                                         window=cfg.sliding_window)
             else:
                 if build_cache:
-                    out, cache_entry = self._gqa_fwd_cache(p["mixer"], h,
-                                                           positions, max_seq)
+                    out, cache_entry = self._gqa_fwd_cache(
+                        p["mixer"], h, positions, max_seq, paged=paged)
                 else:
                     out = A.gqa_forward(p["mixer"], cfg, h, positions,
                                         causal=causal,
@@ -237,15 +245,22 @@ class Model:
             x = x + y
         return x, cache_entry, aux
 
-    def _gqa_fwd_cache(self, p, h, positions, max_seq):
+    def _gqa_fwd_cache(self, p, h, positions, max_seq, paged=False):
         cfg = self.cfg
         out, (k, v) = A.gqa_forward_with_kv(p, cfg, h, positions)
+        if paged:
+            # raw (B, S, Hkv, Dh), rope applied — ready for pool blocks
+            return out, {"k": k, "v": v}
         entry = _ring_from_full(k, v, positions, cfg.sliding_window, max_seq)
         return out, entry
 
-    def _mla_fwd_cache(self, p, h, positions, max_seq):
+    def _mla_fwd_cache(self, p, h, positions, max_seq, paged=False):
         cfg = self.cfg
         out, (c_kv, k_rope) = A.mla_forward_with_cache(p, cfg, h, positions)
+        if paged:
+            # fused latent row (B, S, 1, R + dr) matching the pool layout
+            ckr = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+            return out, {"ckr": ckr}
         entry = _ring_from_full_mla(c_kv, k_rope, positions,
                                     cfg.sliding_window, max_seq)
         return out, entry
@@ -309,7 +324,7 @@ class Model:
     # -- full forward ---------------------------------------------------------
 
     def _trunk(self, params, x, positions, runtime, *, build_cache=False,
-               max_seq=0, enc_out=None, enc_positions=None):
+               max_seq=0, enc_out=None, enc_positions=None, paged=False):
         """Run all layer groups. x: (B, S, D). Returns (x, caches, aux)."""
         cfg = self.cfg
         caches: Dict[str, Any] = {}
@@ -323,7 +338,7 @@ class Model:
                 def body(p, x, _):
                     return self._period_fwd(p, x, positions, runtime, cap,
                                             build_cache=build_cache,
-                                            max_seq=max_seq)
+                                            max_seq=max_seq, paged=paged)
             else:
                 def body(p, x, _, _mx=mixer, _fk=ffn_kind, _cr=cross):
                     return self._block_fwd(
@@ -331,7 +346,8 @@ class Model:
                         runtime=runtime, cap=cap,
                         enc_out=enc_out if _cr else None,
                         enc_positions=enc_positions if _cr else None,
-                        build_cache=build_cache, max_seq=max_seq)
+                        build_cache=build_cache, max_seq=max_seq,
+                        paged=paged)
             x, entries, aux = self._run_stack(params[name], x, body, n)
             total_aux += aux
             if build_cache and entries is not None:
@@ -339,7 +355,7 @@ class Model:
         return x, caches, total_aux
 
     def _period_fwd(self, p, x, positions, runtime, cap, *, build_cache,
-                    max_seq):
+                    max_seq, paged=False):
         """One Jamba period (unrolled heterogeneous sublayers)."""
         cfg = self.cfg
         aux = 0.0
@@ -351,7 +367,7 @@ class Model:
             x, entry, a = self._block_fwd(
                 p[f"sub_{i}"], x, positions, mixer=mixer, ffn_kind=ffn_kind,
                 runtime=runtime, cap=cap, build_cache=build_cache,
-                max_seq=max_seq)
+                max_seq=max_seq, paged=paged)
             aux += a
             if build_cache:
                 if mixer == "attn":
@@ -390,7 +406,7 @@ class Model:
         return x, positions
 
     def logits_full(self, params, batch, runtime=None, *,
-                    build_cache=False, max_seq=0):
+                    build_cache=False, max_seq=0, paged=False):
         """Full-sequence forward. Returns (logits, caches, aux)."""
         cfg = self.cfg
         runtime = runtime if runtime is not None else self.default_runtime()
@@ -403,7 +419,8 @@ class Model:
         x, caches, aux = self._trunk(params, x, positions, runtime,
                                      build_cache=build_cache, max_seq=max_seq,
                                      enc_out=enc_out,
-                                     enc_positions=enc_positions)
+                                     enc_positions=enc_positions,
+                                     paged=paged)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = x @ params["lm_head"]
         if build_cache and cfg.family == "audio":
@@ -472,6 +489,148 @@ class Model:
             pos = jnp.full((B,), S, jnp.int32)
         caches["pos"] = pos.astype(jnp.int32)
         return last, caches
+
+    def prefill_paged(self, params, batch, runtime=None):
+        """Prefill for the paged serving cache.
+
+        Returns ``(last_logits, raw)`` where ``raw`` mirrors the paged
+        cache structure with *raw per-token* leaves: attention layers
+        carry (B, S, ...) K/V rows ready to scatter into pool blocks
+        (``cache_ops.install_prefill``), non-attention mixers carry their
+        final recurrent state (B, ...) for the request's batch slot.
+        """
+        logits, caches, _ = self.logits_full(params, batch, runtime,
+                                             build_cache=True, paged=True)
+        B = logits.shape[0]
+        if "lengths" in batch:
+            last = logits[jnp.arange(B), batch["lengths"] - 1]
+        else:
+            last = logits[:, -1]
+        return last, caches
+
+    def init_paged_cache(self, batch: int, num_blocks: int,
+                         block_size: int, dtype=None):
+        """Block-pool decode cache — the serving engine's compiled cache.
+
+        Attention layers get per-layer K/V pools with **no batch axis**
+        (requests own physical blocks, addressed through block tables);
+        non-attention mixers (Mamba state) keep fixed-size per-slot state
+        with a batch axis.  The pools carry one extra trailing *trash*
+        block (id == ``num_blocks``) that idle batch slots write into, so
+        a full decode batch never touches live blocks.
+        """
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        nb = num_blocks + 1  # + trash block
+        caches: Dict[str, Any] = {}
+        for name, n, mixer, ffn_kind, cross in self.layer_groups():
+            if name == "enc_layers":
+                continue
+            if cross:
+                raise ValueError(
+                    "paged serving does not support encoder-decoder "
+                    "(audio) models")
+            if mixer == "hybrid":
+                attn_c = _stack_cache(
+                    lambda: A.gqa_paged_pools(cfg, nb, block_size, dtype), n)
+                ssm_c = _stack_cache(
+                    lambda: _stack_cache(
+                        lambda: M.mamba_init_state(cfg, batch, dtype),
+                        cfg.hybrid_period - 1), n)
+                caches[name] = {"attn": attn_c, "ssm": ssm_c}
+            elif mixer == "mamba":
+                caches[name] = _stack_cache(
+                    lambda: M.mamba_init_state(cfg, batch, dtype), n)
+            elif cfg.attention_type == "mla":
+                caches[name] = _stack_cache(
+                    lambda: A.mla_paged_pools(cfg, nb, block_size, dtype), n)
+            else:
+                caches[name] = _stack_cache(
+                    lambda: A.gqa_paged_pools(cfg, nb, block_size, dtype), n)
+        return caches
+
+    def decode_step_paged(self, params, cache, token, page, runtime=None):
+        """One decode step against the paged cache.
+
+        token: (B,) int32; ``page`` carries the per-step paging arrays:
+        ``tables`` (B, max_blk) int32 block tables, ``seq_lens`` (B,)
+        valid length *including* this step's token, ``write_bid``/
+        ``write_off`` (B,) physical destination of the incoming token
+        (idle slots point at the trash block with seq_len 0).  Returns
+        (logits, new_cache); positions derive from seq_lens, so the
+        cache carries no per-slot position state.
+        """
+        cfg = self.cfg
+        runtime = runtime if runtime is not None else self.default_runtime()
+        x = params["embed"][token]                       # (B, D)
+        B = x.shape[0]
+        cap = self._cap(B) if cfg.moe else 0
+        new_cache = dict(cache)
+        for name, n, mixer, ffn_kind, cross in self.layer_groups():
+            if name == "enc_layers":
+                continue
+            if mixer == "hybrid":
+                def body(p, x, csl):
+                    return self._period_decode_paged(p, x, csl, page,
+                                                     runtime, cap)
+            else:
+                def body(p, x, csl, _mx=mixer, _fk=ffn_kind):
+                    return self._block_decode_paged(
+                        p, x, csl, page, runtime, cap,
+                        mixer=_mx, ffn_kind=_fk)
+            x, entries, _ = self._run_stack(params[name], x, body, n,
+                                            cache=cache[name])
+            new_cache[name] = entries
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"]
+        return logits, new_cache
+
+    def _block_decode_paged(self, p, x, csl, page, runtime, cap, *,
+                            mixer, ffn_kind):
+        from repro.kernels.ops import _on_cpu
+        cfg = self.cfg
+        aux = 0.0
+        use_pallas = not _on_cpu()
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mixer == "attn":
+            if cfg.attention_type == "mla":
+                out, entry = A.mla_decode_paged(p["mixer"], cfg, h, csl,
+                                                page, use_pallas=use_pallas)
+            else:
+                out, entry = A.gqa_decode_paged(p["mixer"], cfg, h, csl,
+                                                page, use_pallas=use_pallas)
+        else:
+            out, entry = M.mamba_decode(p["mixer"], cfg, h, csl)
+        x = x + out
+        if ffn_kind in ("dense", "dense_first"):
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + F.ffn_apply(p["ffn"], h2, cfg.activation)
+        elif ffn_kind == "moe":
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, aux = self._moe(p["moe"], h2, runtime, cap)
+            x = x + y
+        return x, entry, aux
+
+    def _period_decode_paged(self, p, x, csl, page, runtime, cap):
+        cfg = self.cfg
+        si = 0
+        new_ssm = []
+        new_attn = None
+        for i in range(cfg.hybrid_period):
+            mixer = "attn" if i == cfg.hybrid_attn_index else "mamba"
+            ffn_kind = "moe" if (i % cfg.moe.moe_layer_period == 1) else "dense"
+            sub_c = csl["attn"] if mixer == "attn" else take_layer(
+                csl["ssm"], si)
+            x, entry, _ = self._block_decode_paged(
+                p[f"sub_{i}"], x, sub_c, page, runtime, cap,
+                mixer=mixer, ffn_kind=ffn_kind)
+            if mixer == "attn":
+                new_attn = entry
+            else:
+                new_ssm.append(entry)
+                si += 1
+        ssm = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_ssm)
+        return x, {"attn": new_attn, "ssm": ssm}, 0.0
 
     def init_cache(self, batch: int, max_seq: int, dtype=None):
         """Fresh (empty) decode cache — used by the decode dry-runs."""

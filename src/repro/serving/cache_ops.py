@@ -1,29 +1,62 @@
-"""Slot-wise operations on decode caches.
+"""Structural operations on serving decode caches.
 
-The executor's decode cache is a fixed-max-batch pytree; requests occupy
-slots.  Batch axes differ per leaf (stacked layer caches carry the batch
-on axis 1, ``pos`` on axis 0, hybrid SSM states on axis 2), so we infer
-the batch axis per leaf once by comparing eval_shapes at two batch sizes.
+The serving cache is paged: attention layers hold block pools with *no*
+batch axis (requests own physical blocks, addressed through block
+tables), while non-attention mixers (Mamba state) hold fixed-size
+per-slot state with a batch axis.  The helpers here tell the two apart
+once, structurally — a leaf whose shape changes with the batch size is
+per-slot state (its batch axis is recorded), one that doesn't is a pool
+(axis ``None``) — and implement the slot/block scatter-gather the
+executor and KV-block migration are built on.
+
+``read_slot``/``write_slot`` are the *legacy ring-cache* per-slot ops:
+they require an all-int axes tree (``infer_batch_axes``) and do not
+accept the paged cache's ``None`` pool axes — the paged path uses
+``install_prefill`` / ``gather_request_blocks`` /
+``scatter_request_blocks``, which branch on ``None`` per leaf.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 def infer_batch_axes(model, max_seq: int):
-    """Returns a pytree (matching the cache) of int batch-axis per leaf."""
+    """Batch axis per leaf of the dense (ring) cache — legacy helper for
+    the reference decode path and its tests."""
     s1 = jax.eval_shape(lambda: model.init_cache(1, max_seq))
     s2 = jax.eval_shape(lambda: model.init_cache(2, max_seq))
+    return jax.tree_util.tree_map(_single_axis, s1, s2)
+
+
+def infer_paged_axes(model, num_blocks: int, block_size: int):
+    """Per-leaf batch axis of the paged cache; ``None`` marks pool leaves
+    (shape independent of the batch size)."""
+    s1 = jax.eval_shape(lambda: model.init_paged_cache(1, num_blocks,
+                                                       block_size))
+    s2 = jax.eval_shape(lambda: model.init_paged_cache(2, num_blocks,
+                                                       block_size))
 
     def axis(a, b):
-        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if not diffs:
+            return None
         assert len(diffs) == 1, (a.shape, b.shape)
         return diffs[0]
 
-    return jax.tree_util.tree_map(axis, s1, s2)
+    # tree_map would collapse None into structure; keep a flat list
+    leaves1, treedef = jax.tree_util.tree_flatten(s1)
+    leaves2 = jax.tree_util.tree_flatten(s2)[0]
+    return treedef, [axis(a, b) for a, b in zip(leaves1, leaves2)]
+
+
+def _single_axis(a, b):
+    diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+    assert len(diffs) == 1, (a.shape, b.shape)
+    return diffs[0]
 
 
 def write_slot(cache, sub, slot: int, axes):
@@ -42,3 +75,79 @@ def read_slot(cache, slot: int, axes):
         idx[ax] = slice(slot, slot + 1)
         return c[tuple(idx)]
     return jax.tree_util.tree_map(rd, cache, axes)
+
+
+# -- paged-cache ops (pool leaves have axis None) ---------------------------
+
+
+def install_prefill(cache, raw, axes_leaves: List[Optional[int]],
+                    block_ids, slot):
+    """Scatter one prefilled request into the paged cache.
+
+    ``raw`` is ``Model.prefill_paged``'s output for a batch of 1: pool
+    leaves carry (L, 1, S, *rest) raw K/V rows, written block-wise at
+    ``block_ids`` (ids past the request's table point at the trash
+    block); state leaves carry (L, 1, ...) final recurrent state, written
+    into batch slot ``slot``.  ``block_ids`` (nblk,) and ``slot`` may be
+    traced — the engine compiles this per prefill bucket.
+    """
+    nblk = block_ids.shape[0]
+    c_leaves, treedef = jax.tree_util.tree_flatten(cache)
+    r_leaves = jax.tree_util.tree_flatten(raw)[0]
+    out = []
+    for c, r, ax in zip(c_leaves, r_leaves, axes_leaves):
+        if ax is None:
+            L, _, bs = c.shape[0], c.shape[1], c.shape[2]
+            S = r.shape[2]
+            pad = nblk * bs - S
+            assert pad >= 0, (nblk, bs, S)
+            rb = jnp.pad(r[:, 0], [(0, 0), (0, pad)]
+                         + [(0, 0)] * (r.ndim - 3))
+            rb = rb.reshape((L, nblk, bs) + r.shape[3:])
+            out.append(c.at[:, block_ids].set(rb.astype(c.dtype)))
+        else:
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                c, r.astype(c.dtype), slot, ax))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gather_request_blocks(cache, axes_leaves: List[Optional[int]],
+                          block_ids, slot: int):
+    """Extract one request's device state for KV-block migration.
+
+    Returns ``(pool_blocks, state)`` as flat leaf lists aligned with the
+    cache's flatten order: pool leaves gathered block-wise →
+    (L, nblk, bs, *rest); state leaves sliced at ``slot`` → (L, 1, ...);
+    the other kind is ``None`` in each list.
+    """
+    bids = jnp.asarray(block_ids, jnp.int32)
+    pool_blocks: List[Any] = []
+    state: List[Any] = []
+    for c, ax in zip(jax.tree_util.tree_flatten(cache)[0], axes_leaves):
+        if ax is None:
+            pool_blocks.append(c[:, bids])
+            state.append(None)
+        else:
+            idx = [slice(None)] * c.ndim
+            idx[ax] = slice(slot, slot + 1)
+            pool_blocks.append(None)
+            state.append(c[tuple(idx)])
+    return pool_blocks, state
+
+
+def scatter_request_blocks(cache, axes_leaves: List[Optional[int]],
+                           pool_blocks, state, block_ids, slot: int):
+    """Inverse of :func:`gather_request_blocks` on the *target* cache:
+    install migrated pool blocks at freshly allocated ``block_ids`` and
+    the request's recurrent state at batch slot ``slot``."""
+    bids = jnp.asarray(block_ids, jnp.int32)
+    c_leaves, treedef = jax.tree_util.tree_flatten(cache)
+    out = []
+    for c, ax, pb, st in zip(c_leaves, axes_leaves, pool_blocks, state):
+        if ax is None:
+            out.append(c.at[:, bids].set(jnp.asarray(pb, c.dtype)))
+        else:
+            idx = [slice(None)] * c.ndim
+            idx[ax] = slice(slot, slot + 1)
+            out.append(c.at[tuple(idx)].set(jnp.asarray(st, c.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -59,8 +59,8 @@ def _specs(tree):
 
 
 def _decode_closure(model: Model, version: int):
-    def fn(params, cache, tokens, runtime):
-        return model.decode_step(params, cache, tokens, runtime)
+    def fn(params, cache, tokens, page, runtime):
+        return model.decode_step_paged(params, cache, tokens, page, runtime)
     fn.__name__ = f"decode_v{version}"
     fn.__qualname__ = fn.__name__
     return fn
@@ -69,8 +69,18 @@ def _decode_closure(model: Model, version: int):
 def _prefill_closure(model: Model, version: int, max_seq: int):
     def fn(params, tokens, lengths, runtime):
         batch = {"tokens": tokens, "lengths": lengths}
-        return model.prefill(params, batch, runtime, max_seq=max_seq)
+        return model.prefill_paged(params, batch, runtime)
     fn.__name__ = f"prefill_v{version}"
+    fn.__qualname__ = fn.__name__
+    return fn
+
+
+def _install_closure(axes_leaves, bucket: int):
+    from repro.serving.cache_ops import install_prefill
+
+    def fn(cache, raw, block_ids, slot):
+        return install_prefill(cache, raw, axes_leaves, block_ids, slot)
+    fn.__name__ = f"install_b{bucket}"
     fn.__qualname__ = fn.__name__
     return fn
 
@@ -88,6 +98,9 @@ class _Ctx:
 
     def prefill_fn(self, bucket: int):
         return self.engine.get_compiled("prefill", bucket)
+
+    def install_fn(self, bucket: int):
+        return self.engine.get_compiled("install", bucket)
 
 
 @dataclass
@@ -207,6 +220,9 @@ class InferenceEngine:
             self.monitor = HeartbeatMonitor(ec.heartbeat_timeout_steps)
             self.straggler = StragglerDetector()
             self.model = Model(self.cfg)
+            from repro.serving.cache_ops import infer_paged_axes
+            _, self.paged_axes = infer_paged_axes(
+                self.model, ec.num_blocks, ec.block_size)
             os.makedirs(ec.workdir, exist_ok=True)
             self.ckpt_path = os.path.join(ec.workdir, "weights.npz")
 
@@ -255,7 +271,8 @@ class InferenceEngine:
                     physical_id=i, dp_rank=i, model=self.model,
                     max_batch=ec.max_batch, max_seq=ec.max_seq,
                     num_blocks=ec.num_blocks, block_size=ec.block_size,
-                    sampling=ec.sampling, ep_rank=ep_rank, shard=shard))
+                    sampling=ec.sampling, ep_rank=ep_rank, shard=shard,
+                    paged_axes=self.paged_axes))
             self.moe_executors: List[MoEExecutor] = []
             if self.cfg.moe is not None and ec.mode == "disaggregated":
                 for j in range(ec.num_moe):
@@ -296,17 +313,34 @@ class InferenceEngine:
     def _next_version(self) -> int:
         return self.domain.version + 1 if hasattr(self, "domain") else 0
 
+    def _cache_specs(self):
+        return jax.eval_shape(
+            lambda: self.model.init_paged_cache(
+                self.ecfg.max_batch, self.ecfg.num_blocks,
+                self.ecfg.block_size))
+
     def _arg_specs(self, phase: str, bucket: Optional[int] = None):
+        from repro.serving.kvcache import (max_blocks_per_seq,
+                                           page_context_specs)
         p_specs = _specs(self.params)
         r_specs = _specs(self.runtime)
         if phase == "decode":
-            c_specs = jax.eval_shape(
-                lambda: self.model.init_cache(self.ecfg.max_batch,
-                                              self.ecfg.max_seq))
+            c_specs = self._cache_specs()
             tok = jax.ShapeDtypeStruct((self.ecfg.max_batch,), jnp.int32)
-            return (p_specs, c_specs, tok, r_specs)
+            page = page_context_specs(
+                self.ecfg.max_batch,
+                max_blocks_per_seq(self.ecfg.max_seq, self.ecfg.block_size))
+            return (p_specs, c_specs, tok, page, r_specs)
         toks = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
         lens = jax.ShapeDtypeStruct((1,), jnp.int32)
+        if phase == "install":
+            raw_specs = jax.eval_shape(self.model.prefill_paged, p_specs,
+                                       {"tokens": toks, "lengths": lens},
+                                       r_specs)[1]
+            nblk = max_blocks_per_seq(bucket, self.ecfg.block_size)
+            bids = jax.ShapeDtypeStruct((nblk,), jnp.int32)
+            slot = jax.ShapeDtypeStruct((), jnp.int32)
+            return (self._cache_specs(), raw_specs, bids, slot)
         return (p_specs, toks, lens, r_specs)
 
     def _compile_initial(self, t: Dict[str, float]) -> None:
@@ -335,17 +369,25 @@ class InferenceEngine:
             ("prefill", v, b),
             _prefill_closure(self.model, v, self.ecfg.max_seq),
             self._arg_specs("prefill", b))
+        if ("install", 0, b) not in self.graph_cache:
+            self.graph_cache.precompile(
+                ("install", 0, b), _install_closure(self.paged_axes, b),
+                self._arg_specs("install", b))
 
     # -- compiled-fn access ------------------------------------------------------
 
     def get_compiled(self, phase: str, bucket: Optional[int] = None):
-        v = self.domain.version
-        key = (phase, v, bucket if phase == "prefill" else None)
+        # the install scatter has no collectives: its graph is domain-
+        # version independent and survives every comm rebuild
+        v = 0 if phase == "install" else self.domain.version
+        key = (phase, v, bucket if phase in ("prefill", "install") else None)
         if key in self.graph_cache:
             fn, _ = self.graph_cache.get_or_compile(key, None, None)
             return fn
         if phase == "decode":
             fn = _decode_closure(self.model, v)
+        elif phase == "install":
+            fn = _install_closure(self.paged_axes, bucket)
         else:
             fn = _prefill_closure(self.model, v, self.ecfg.max_seq)
         compiled, _ = self.graph_cache.get_or_compile(
@@ -372,32 +414,107 @@ class InferenceEngine:
         req.dp_rank = ex.dp_rank
         ex.scheduler.add_request(req)
 
-    def admit(self, req: Request) -> Request:
-        """Admit a request created elsewhere (cross-instance migration):
-        it re-enters with prompt + decoded prefix intact, so the next
-        prefill resumes generation without redoing completed tokens."""
+    def admit(self, req: Request, kv=None) -> Request:
+        """Admit a request created elsewhere (cross-instance migration).
+
+        With a :class:`~repro.core.migration.KVBlocks` payload the least-
+        loaded healthy executor installs the streamed blocks directly —
+        the request skips re-prefill and decodes on the next step.
+        Without one (or if no executor can take the blocks) it re-enters
+        with prompt + decoded prefix intact, so the next prefill resumes
+        generation without redoing completed tokens."""
+        if kv is not None:
+            healthy = sorted(
+                (ex for ex in self.dp_executors
+                 if ex.alive and ex.cache is not None),
+                key=lambda e: e.scheduler.num_requests)
+            for ex in healthy:
+                if ex.import_kv_blocks(req, kv):
+                    if all(r is not req for r in self.all_requests):
+                        self.all_requests.append(req)
+                    return req
+            # stream install failed (no slot/blocks): the prefix must be
+            # re-prefilled after all — charge the replay now
+            from repro.core.migration import charge_replay
+            charge_replay(req)
         self._assign(req)
         if all(r is not req for r in self.all_requests):
             self.all_requests.append(req)
         return req
 
-    def export_live_requests(self) -> List[Request]:
+    def export_live_requests(self, with_kv: bool = False):
         """Fleet drain/export hook: strip every unfinished request off
         this instance — dead executors included, their token ids live in
-        host memory — prepared for re-prefill on another instance."""
+        host memory.  With ``with_kv``, each RUNNING request's live
+        blocks are extracted first from executors whose device state is
+        still reachable (rollback-then-migrate: any uncommitted step is
+        rolled back before the read, so tables and pools agree) and the
+        result is ``[(req, KVBlocks | None)]``; a None payload means
+        token-replay re-prefill on the target."""
         from repro.core.migration import prepare_for_migration
-        out: List[Request] = []
+        out = []
         for ex in self.dp_executors:
+            payloads = {}
+            if with_kv and ex.alive and ex.cache is not None:
+                if len(ex.block_log) > 0:
+                    ex.rollback_inflight()
+                for req in list(ex.scheduler.running):
+                    blocks_kv = ex.export_kv_blocks(req)
+                    if blocks_kv is not None:
+                        payloads[req.req_id] = blocks_kv
             for req in ex.scheduler.drain():
                 if req.state in (RequestState.FINISHED,
                                  RequestState.FAILED):
                     continue
-                prepare_for_migration(req)
-                out.append(req)
-        gone = {r.req_id for r in out}
+                blocks_kv = payloads.get(req.req_id)
+                prepare_for_migration(req, streamed=blocks_kv is not None)
+                out.append((req, blocks_kv) if with_kv else req)
+        gone = {(r[0] if with_kv else r).req_id for r in out}
         self.all_requests = [r for r in self.all_requests
                              if r.req_id not in gone]
         return out
+
+    def streamable_split(self) -> Tuple[int, int]:
+        """(streamable, replay-only) token counts over this instance's
+        unfinished requests — the spare-substitution cost split: RUNNING
+        requests on reachable executors can stream their KV blocks;
+        everything else re-prefills on the target."""
+        stream = replay = 0
+        for ex in self.dp_executors:
+            reachable = ex.alive and ex.cache is not None
+            for r in list(ex.scheduler.waiting) + list(ex.scheduler.running):
+                if r.state in (RequestState.FINISHED, RequestState.FAILED):
+                    continue
+                if (reachable and r.state is RequestState.RUNNING
+                        and r.batch_slot is not None and r.output_tokens):
+                    stream += r.num_tokens
+                else:
+                    replay += r.num_tokens
+        return stream, replay
+
+    def predict_masked_fraction(self, rank: int) -> float:
+        """Fraction of logical experts that would lose every live replica
+        if physical ``rank``'s expert slots died — the degraded-quality
+        input to the fleet cost model (revive may serve with those
+        experts masked until a role switch restores them)."""
+        if self.expert_map is None:
+            return 0.0
+        ep_rank = None
+        for ex in self.dp_executors:
+            if ex.physical_id == rank:
+                ep_rank = ex.ep_rank
+        for mex in self.moe_executors:
+            if mex.physical_id == rank:
+                ep_rank = mex.ep_rank
+        if ep_rank is None:
+            return 0.0
+        emap = self.expert_map
+        dead = set(emap.rank_slots(ep_rank))
+        lost = sum(
+            1 for e in range(emap.moe.num_experts)
+            if e not in emap.masked
+            and not [s for s in emap.replicas_of(e) if s not in dead])
+        return lost / emap.moe.num_experts
 
     def health(self) -> InstanceHealth:
         healthy_dp = [ex for ex in self.dp_executors

@@ -1,14 +1,19 @@
 """Executors: DPExecutor (attention rank) and MoEExecutor (expert rank).
 
-A DPExecutor owns a local scheduler, paged-KV block accounting (with the
-§3.3 undo log), a fixed-max-batch decode cache, and heartbeats to the
-engine.  A MoEExecutor owns one EP rank's physical expert slots; its
-weights are destroyed if it fails.
+A DPExecutor owns a local scheduler and the paged serving cache: block
+pools (one trailing trash block for idle batch slots) addressed through
+the ``BlockManager``/``BlockTable`` accounting, with the §3.3 undo log
+covering both the host-side block ops and (via a functional snapshot)
+the device-side pool writes.  Prefill scatters raw K/V into a request's
+blocks; decode attends through per-step paging arrays
+(``kvcache.build_page_context``) that ride into the compiled step as
+data, so continuous batching and recovery never retrigger compilation.
 
 Steps are two-phase to model collective lockstep: ``plan`` (host work —
 admission, block allocation, all logged) then ``compute`` (the device
 step).  A fault between the phases leaves an uncommitted log, which
-recovery rolls back (§3.3).
+recovery rolls back (§3.3) — block tables from the op log, pools from
+the snapshot.
 """
 from __future__ import annotations
 
@@ -18,8 +23,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.block_log import BlockLog, BlockManager
-from repro.serving.cache_ops import infer_batch_axes, read_slot, write_slot
+from repro.core.block_log import BlockLog, BlockManager, BlockTable
+from repro.core.migration import KVBlocks
+from repro.serving.cache_ops import (gather_request_blocks,
+                                     infer_paged_axes,
+                                     scatter_request_blocks)
+from repro.serving.kvcache import (build_page_context, max_blocks_per_seq,
+                                   padded_block_ids)
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import LocalScheduler, StepPlan
@@ -59,7 +69,8 @@ class DPExecutor:
                  max_batch: int, max_seq: int, num_blocks: int,
                  block_size: int, sampling: SamplingParams,
                  ep_rank: Optional[int] = None,
-                 shard: Optional[Dict[str, np.ndarray]] = None):
+                 shard: Optional[Dict[str, np.ndarray]] = None,
+                 paged_axes: Optional[list] = None):
         self.physical_id = physical_id
         self.dp_rank = dp_rank
         self.model = model
@@ -72,12 +83,19 @@ class DPExecutor:
         self.ep_rank = ep_rank
         self.shard = shard
 
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blk = max_blocks_per_seq(max_seq, block_size)
+        self.trash_block = num_blocks      # the extra pool row (see model)
         self.block_manager = BlockManager(num_blocks, block_size)
         self.block_log = BlockLog()
         self.scheduler = LocalScheduler(max_batch, max_seq,
                                         self.block_manager)
-        self.cache = model.init_cache(max_batch, max_seq)
-        self.batch_axes = infer_batch_axes(model, max_seq)
+        self.cache = model.init_paged_cache(max_batch, num_blocks,
+                                            block_size)
+        if paged_axes is None:   # the engine passes its shared copy in
+            _, paged_axes = infer_paged_axes(model, num_blocks, block_size)
+        self.paged_axes = paged_axes
         self.last_token = np.zeros((max_batch,), np.int32)
         self.steps_done = 0
         self._plan: Optional[StepPlan] = None
@@ -100,19 +118,33 @@ class DPExecutor:
         self.process_alive = False
         self._plan = None
 
-    def drop_attention_state(self) -> List[Request]:
+    def drop_attention_state(self, collect_kv: bool = False):
         """Role switch (§3.4): shed KV caches, scheduler, attention duty.
 
-        Returns the requests that must migrate elsewhere."""
+        Returns the requests that must migrate elsewhere; with
+        ``collect_kv`` their live blocks are extracted *first* (the donor
+        device is healthy — §3.4's role switch, unlike a failure, can
+        stream its residents' KV instead of forcing re-prefill) and the
+        result is ``[(req, KVBlocks | None)]``."""
+        payloads = {}
+        if collect_kv:
+            for req in list(self.scheduler.running):
+                kv = self.export_kv_blocks(req)
+                if kv is not None:
+                    payloads[req.req_id] = kv
         reqs = self.scheduler.drain()
         self.cache = None
         self.block_log = BlockLog()
+        if collect_kv:
+            return [(r, payloads.get(r.req_id)) for r in reqs]
         return reqs
 
     # -- two-phase step -----------------------------------------------------------
 
     def plan(self) -> StepPlan:
         self.block_log.begin_step()
+        # §3.3 device half: the pool value at the step boundary
+        self.block_log.snapshot_pools(self.cache)
         self._plan = self.scheduler.plan_step(self.block_log)
         return self._plan
 
@@ -131,10 +163,14 @@ class DPExecutor:
             padded[0, :len(toks)] = toks
             lengths = np.asarray([len(toks)], np.int32)
             prefill_fn = ctx.prefill_fn(bucket)
-            last_logits, sub_cache = prefill_fn(
-                params, padded, lengths, runtime)
-            self.cache = write_slot(self.cache, sub_cache, req.batch_slot,
-                                    self.batch_axes)
+            last_logits, raw = prefill_fn(params, padded, lengths, runtime)
+            nblk = max_blocks_per_seq(bucket, self.block_size)
+            bids = padded_block_ids(
+                self.scheduler.block_tables[req.req_id].blocks, nblk,
+                self.trash_block)
+            install_fn = ctx.install_fn(bucket)
+            self.cache = install_fn(self.cache, raw, bids,
+                                    np.int32(req.batch_slot))
             # seed by sequence position, not engine step: the token is a
             # pure function of (seed, prefix, position) and survives
             # replay on any executor of any fleet instance
@@ -150,9 +186,13 @@ class DPExecutor:
                 finished.append(req)
 
         if plan.decode:
+            page = build_page_context(
+                plan.decode, self.scheduler.block_tables,
+                max_batch=self.max_batch, max_blk=self.max_blk,
+                block_size=self.block_size, trash_block=self.trash_block)
             tokens = np.asarray(self.last_token)
             logits, new_cache = ctx.decode_fn(
-                params, self.cache, tokens, runtime)
+                params, self.cache, tokens, page, runtime)
             self.cache = new_cache
             logits = np.asarray(logits)
             # one batched sample over the whole decode batch (the
@@ -179,7 +219,13 @@ class DPExecutor:
         self.block_log.begin_step()  # clears; committed counter advances
 
     def rollback_inflight(self) -> int:
-        """§3.3: undo all block ops of the in-flight (uncommitted) step."""
+        """§3.3: undo all block ops of the in-flight (uncommitted) step —
+        host block tables from the op log, device pools from the step-
+        boundary snapshot (any in-flight pool write is discarded with it,
+        so table and pool agree exactly on which rows are live)."""
+        snap = self.block_log.take_pool_snapshot()
+        if snap is not None and self.cache is not None:
+            self.cache = snap
         n = self.block_log.undo_all(self.block_manager,
                                     self.scheduler.block_tables)
         # admissions from the aborted step (their allocs were all undone,
@@ -195,3 +241,65 @@ class DPExecutor:
             self.scheduler.requeue_front(r)
         self._plan = None
         return n
+
+    # -- KV-block migration (§3.2, streaming path) --------------------------------
+
+    def export_kv_blocks(self, req: Request) -> Optional[KVBlocks]:
+        """Extract a RUNNING request's live blocks + recurrent state.
+
+        None when this device's state is unreachable or the request has
+        no installed KV yet (still WAITING, or mid-migration) — callers
+        fall back to token-replay re-prefill."""
+        if self.cache is None or not self.alive:
+            return None
+        if req.state is not RequestState.RUNNING or req.batch_slot is None:
+            return None
+        table = self.scheduler.block_tables.get(req.req_id)
+        if table is None or not req.output_tokens:
+            return None
+        valid_len = req.num_tokens - 1   # last sampled token's KV is not
+        if valid_len <= 0:               # written until its decode step
+            return None
+        nblk = (valid_len + self.block_size - 1) // self.block_size
+        bids = table.blocks[:nblk]
+        pools, state = gather_request_blocks(self.cache, self.paged_axes,
+                                             bids, req.batch_slot)
+        return KVBlocks(
+            block_size=self.block_size, num_blocks=nblk,
+            valid_len=valid_len,
+            pool_blocks=[None if p is None else np.asarray(p)
+                         for p in pools],
+            state=[None if s is None else np.asarray(s) for s in state],
+            last_token=int(req.output_tokens[-1]))
+
+    def import_kv_blocks(self, req: Request, kv: KVBlocks) -> bool:
+        """Install streamed blocks: allocate fresh physical blocks here,
+        scatter the payload, and adopt the request as RUNNING — it skips
+        re-prefill entirely and decodes on the next step.  False when
+        this executor lacks a batch slot or enough free blocks."""
+        if self.cache is None or not self.alive:
+            return False
+        if kv.block_size != self.block_size:
+            return False
+        if not self.scheduler._free_slots:
+            return False
+        need = max(kv.num_blocks, self.scheduler._blocks_needed(
+            min(req.num_tokens + 1, self.max_seq)))
+        if self.block_manager.num_free < need:
+            return False
+        # host accounting mirrors admission; import runs at a step
+        # boundary, so the ops commit immediately (log=None)
+        table = BlockTable(req.req_id)
+        for _ in range(need):
+            table.append_block(self.block_manager.allocate())
+        self.scheduler.block_tables[req.req_id] = table
+        req.batch_slot = self.scheduler._free_slots.pop()
+        req.dp_rank = self.dp_rank
+        req.state = RequestState.RUNNING
+        self.scheduler.running.append(req)
+        self.cache = scatter_request_blocks(
+            self.cache, self.paged_axes, kv.pool_blocks, kv.state,
+            np.asarray(table.blocks[:kv.num_blocks], np.int32),
+            req.batch_slot)
+        self.last_token[req.batch_slot] = kv.last_token
+        return True

@@ -1,14 +1,20 @@
 """Paged KV cache: physical block pools addressed through block tables.
 
-This is the device-side twin of the host-side block accounting in
+This is the engine's **only** compiled serving-cache representation (the
+dense per-slot ring caches in ``repro.models.attention`` remain as the
+reference decode semantics, proven equivalent in
+tests/test_paged_serving.py).  The host-side twin is
 ``repro.core.block_log``: the BlockManager/BlockTable decide *which*
-physical block a token lands in (all logged/undoable); this module owns
-the tensor pools and the attention over them.  The attention hot path is
-the Pallas ``paged_attention`` kernel (TPU) / its jnp oracle (CPU).
+physical block a token lands in (all logged/undoable); the device-side
+pools live inside the model's paged cache pytree
+(``Model.init_paged_cache``) and are attended through
+``ops.paged_attention`` — the Pallas kernel on TPU, its jnp oracle on
+CPU.
 
-Used by the TPU-native decode path and the paged-serving integration
-tests; the CPU engine's compiled path uses ring caches (DESIGN.md §2),
-with equivalence between the two proven in tests/test_paged_serving.py.
+This module owns the host-side glue: packing the per-step paging arrays
+(block tables, valid lengths, write destinations) that ride into the
+compiled decode step as data, so continuous batching, migration, and
+recovery never retrigger compilation.
 """
 from __future__ import annotations
 
@@ -22,8 +28,70 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops
 
 
+def max_blocks_per_seq(max_seq: int, block_size: int) -> int:
+    return (max_seq + block_size - 1) // block_size
+
+
+def table_array(tables: Dict[int, "BlockTable"], order: List[int],
+                max_blk: int) -> np.ndarray:
+    """Pack host-side block tables into the (B, max_blk) device array."""
+    out = np.zeros((len(order), max_blk), np.int32)
+    for i, seq_id in enumerate(order):
+        blocks = tables[seq_id].blocks
+        out[i, : len(blocks)] = blocks[:max_blk]
+    return out
+
+
+def build_page_context(decode_reqs, block_tables, *, max_batch: int,
+                       max_blk: int, block_size: int,
+                       trash_block: int) -> Dict[str, np.ndarray]:
+    """The per-step paging arrays for one decode batch.
+
+    For each request in ``decode_reqs`` (occupying ``req.batch_slot``),
+    position ``num_tokens - 1`` is where this step's incoming token
+    lands; ``seq_lens`` is the valid length including it.  Idle batch
+    slots keep seq_len 0 and write into the trash block, so a full-width
+    decode step never touches live blocks.
+    """
+    tables = np.zeros((max_batch, max_blk), np.int32)
+    seq_lens = np.zeros((max_batch,), np.int32)
+    write_bid = np.full((max_batch,), trash_block, np.int32)
+    write_off = np.zeros((max_batch,), np.int32)
+    for req in decode_reqs:
+        slot = req.batch_slot
+        blocks = block_tables[req.req_id].blocks
+        tables[slot, : len(blocks)] = blocks[:max_blk]
+        wp = req.num_tokens - 1              # position of the new token
+        seq_lens[slot] = wp + 1
+        write_bid[slot] = blocks[wp // block_size]
+        write_off[slot] = wp % block_size
+    return {"tables": tables, "seq_lens": seq_lens,
+            "write_bid": write_bid, "write_off": write_off}
+
+
+def page_context_specs(max_batch: int, max_blk: int):
+    i32 = jnp.int32
+    return {
+        "tables": jax.ShapeDtypeStruct((max_batch, max_blk), i32),
+        "seq_lens": jax.ShapeDtypeStruct((max_batch,), i32),
+        "write_bid": jax.ShapeDtypeStruct((max_batch,), i32),
+        "write_off": jax.ShapeDtypeStruct((max_batch,), i32),
+    }
+
+
+def padded_block_ids(blocks: List[int], nblk: int,
+                     trash_block: int) -> np.ndarray:
+    """A request's block ids padded to the prefill bucket's block count;
+    ids past the table point at the trash block (their rows are dead)."""
+    out = np.full((nblk,), trash_block, np.int32)
+    out[: min(len(blocks), nblk)] = blocks[:nblk]
+    return out
+
+
 class PagedKVCache:
-    """Per-layer K/V pools of shape (num_blocks, block_size, Hkv, Dh)."""
+    """Standalone per-layer K/V pools — the unit-test twin of the pools
+    inside the engine's paged cache pytree (kept for kernel-level tests
+    and ad-hoc experiments; the engine uses ``Model.init_paged_cache``)."""
 
     def __init__(self, cfg: ModelConfig, num_layers: int, num_blocks: int,
                  block_size: int, dtype=jnp.float32):
@@ -69,13 +137,3 @@ class PagedKVCache:
         return ops.paged_attention(q, self.k_pool[layer],
                                    self.v_pool[layer], block_table,
                                    seq_lens, use_pallas=use_pallas)
-
-
-def table_array(tables: Dict[int, "BlockTable"], order: List[int],
-                max_blk: int) -> np.ndarray:
-    """Pack host-side block tables into the (B, max_blk) device array."""
-    out = np.zeros((len(order), max_blk), np.int32)
-    for i, seq_id in enumerate(order):
-        blocks = tables[seq_id].blocks
-        out[i, : len(blocks)] = blocks[:max_blk]
-    return out

@@ -201,6 +201,94 @@ def test_arbiter_cost_model_decisions():
         RecoveryArbiter(cm, force_policy="bogus")
 
 
+def test_cost_model_stream_and_quality_pricing():
+    """Satellite: the cost model prices spare substitution on its real
+    mechanics (KV blocks streamed vs tokens re-prefilled) and revive on
+    stall *plus* degraded quality (masked-expert fraction)."""
+    cm = CostModel({"engine": 1.0}, per_token_prefill_s=1e-3,
+                   per_block_stream_s=1e-5,
+                   degraded_quality_weight_s=2.0,
+                   spare_opportunity_cost_s=0.0)
+    # streaming 1024 tokens as 64 blocks is ~three orders cheaper than
+    # re-prefilling them
+    replay = cm.est_spare_s(1024, 0)
+    stream = cm.est_spare_s(0, 64)
+    assert stream < replay / 100
+    # streamed-cost estimate is ~flat in prefix length, replay is linear
+    assert cm.est_spare_s(0, 256) - cm.est_spare_s(0, 64) < 0.01 * (
+        cm.est_spare_s(4096, 0) - cm.est_spare_s(1024, 0))
+    # degraded quality: half the experts masked adds a real stall-
+    # equivalent term to revive
+    assert cm.quality_cost_s(0.0) == 0.0
+    assert cm.quality_cost_s(0.5) == pytest.approx(1.0)
+    # measurement feedback discounts both migration terms from the swap
+    cm.observe_spare(0.5, tokens=100, streamed_blocks=100)
+    assert cm.spare_swap.value == pytest.approx(0.5 - 0.1 - 1e-3)
+
+
+def test_arbiter_prices_degraded_quality_into_revive():
+    """A fault whose experts have no surviving replica makes revive pay
+    the quality term; with full redundancy it doesn't."""
+    cm = CostModel({"engine": 0.1}, degraded_quality_weight_s=50.0,
+                   spare_opportunity_cost_s=10.0)
+    cm.observe_revive({"total_s": 0.02})
+    cm.observe_restart(0.5)
+    arb = RecoveryArbiter(cm)
+    ev = SimpleNamespace(rank=3)
+
+    def inst(mask_frac):
+        return SimpleNamespace(
+            iid=1, load=2,
+            engine=SimpleNamespace(
+                all_requests=[],
+                streamable_split=lambda: (0, 0),
+                predict_masked_fraction=lambda rank: mask_frac,
+                ecfg=SimpleNamespace(block_size=8)))
+
+    covered = arb.decide(inst(0.0), ev, spare_available=False)
+    assert covered.policy == "revive"
+    degraded = arb.decide(inst(0.5), ev, spare_available=False)
+    assert degraded.policy == "restart"      # quality term flipped it
+    assert "masked" in degraded.reason
+    assert degraded.est_cost["revive"] > covered.est_cost["revive"]
+
+
+@pytest.mark.slow
+def test_spare_pool_background_replenish(shared_workdir):
+    """Satellite (ROADMAP a): after an activation the pool rebuilds a
+    standby in the background instead of shrinking; KV-block streaming
+    keeps the migrated request token-exact with zero recompute."""
+    from repro.core.fault_codes import ErrorType, Severity
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=5)
+    ecfg = fleet_ecfg(shared_workdir, sampling=sp)
+    cfg = fleet_cfg()
+    ref_fleet = build_fleet(cfg, ecfg, instances=1)
+    ref = ref_fleet.submit(PROMPT, 14)
+    ref_fleet.run(max_ticks=150)
+
+    fleet = build_fleet(cfg, ecfg, instances=2, spares=1,
+                        force_policy="spare", replenish_spares=True)
+    req = fleet.submit(PROMPT, 14)
+    for _ in range(5):
+        fleet.tick()
+    assert 0 < len(req.output_tokens) < 14
+    eng = fleet.instances[req.instance_id].engine
+    eng.injector.schedule(eng.step_no + 1, 3, severity=Severity.L6,
+                          error_type=ErrorType.HBM_ECC, component="moe",
+                          mid_step=True)
+    fleet.run(max_ticks=300)
+    assert req.state.value == "finished"
+    assert req.output_tokens == ref.output_tokens
+    # streamed takeover: the prefix was never re-prefilled
+    assert req.cross_instance_migrations == 1
+    assert req.recomputed_tokens == 0
+    # the pool self-healed: one activation, one background replenishment
+    assert fleet.spares.activations == 1
+    assert fleet.spares.replenishments == 1
+    assert fleet.spares.available == fleet.spares.target_size == 1
+    assert any("replenished" in line for line in fleet.log)
+
+
 def test_traffic_sources_deterministic():
     a = PoissonTraffic(100.0, 512, seed=9, limit=5)
     b = PoissonTraffic(100.0, 512, seed=9, limit=5)
