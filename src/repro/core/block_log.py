@@ -1,26 +1,76 @@
-"""Log-based block-table recovery (§3.3).
+"""Log-based block-table recovery (§3.3) + content-hash prefix cache.
 
 During a generation step every block operation (allocate / append /
-ref / unref / free) is appended to a per-step undo log, ARIES-style.  On a
-mid-step failure the log is rolled back in reverse, returning the block
-manager + block tables to the exact state at the step boundary.  At the
-start of each step the previous log is discarded (the step committed).
+ref / free / cache-acquire / register / table-set) is appended to a
+per-step undo log, ARIES-style.  On a mid-step failure the log is rolled
+back in reverse, returning the block manager + block tables to the exact
+state at the step boundary.  At the start of each step the previous log
+is discarded (the step committed).
 
-The log records *inverse information* (prev ref counts, table positions)
-so undo is exact even for idempotence-breaking sequences.
+The log records *inverse information* (prev ref counts, table positions,
+hash mappings) so undo is exact even for idempotence-breaking sequences.
+
+Device-pool consistency has two strategies (the executor picks one):
+
+* **row-level undo** (default): at plan time the step's complete write
+  set is known (decode write destinations, prefill chunk rows, COW
+  copies), so the executor captures just those pool rows and rollback
+  scatters them back — O(write set), not O(pool), and the pool buffers
+  are free to be donated/aliased into the compiled update on TPU.
+* **functional snapshot** (legacy): an O(1) reference to the immutable
+  cache pytree at the step boundary.  Exact, but pins the pre-step pool
+  buffers and forbids donation.
+
+Prefix cache
+============
+``BlockManager`` doubles as a vLLM-style content-hash block cache: a
+*full* block whose tokens (and whole prefix before it) are known is
+registered under a chain digest ``H(parent_digest || tokens)``.  A later
+request whose prompt starts with the same token blocks acquires the
+physical blocks by digest (ref-count shared, zero prefill work); when
+the last owner frees a registered block it parks on a cached-free LRU —
+still addressable by digest, evicted only when the allocator runs dry.
+Partial-prefix reuse is copy-on-write at the divergence block: the
+scheduler finds a cached child block sharing the first ``q`` tokens and
+plans a device copy of those rows into the request's private block.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+ROOT_DIGEST = b""
+
+
+def block_digest(parent: bytes, tokens: Sequence[int]) -> bytes:
+    """Chain digest of one full block: H(parent || token ids)."""
+    h = hashlib.sha256(parent)
+    h.update(b"|")
+    h.update(b",".join(str(int(t)).encode() for t in tokens))
+    return h.digest()
+
+
+def prompt_digests(tokens: Sequence[int], block_size: int) -> List[bytes]:
+    """Chain digests of every *full* block of a token sequence."""
+    out: List[bytes] = []
+    parent = ROOT_DIGEST
+    for i in range(len(tokens) // block_size):
+        parent = block_digest(parent,
+                              tokens[i * block_size:(i + 1) * block_size])
+        out.append(parent)
+    return out
 
 
 @dataclass(frozen=True)
 class BlockOp:
-    kind: str                 # 'alloc' | 'free' | 'append' | 'ref' | 'unref'
+    kind: str     # 'alloc' | 'free' | 'append' | 'ref' | 'unref'
+    #               | 'cache_acquire' | 'hash_set' | 'table_set'
     block_id: int
     seq_id: Optional[int] = None
-    prev_ref: int = 0         # ref count before the op (for free/ref/unref)
+    prev_ref: int = 0         # ref count before the op (for free/ref/...)
+    meta: Any = None          # op-specific inverse info (digest, index...)
 
 
 class BlockLog:
@@ -30,11 +80,13 @@ class BlockLog:
         self._ops: List[BlockOp] = []
         self.steps_committed = 0
         self._pool_snapshot = None
+        self._pool_undo = None
 
     def begin_step(self) -> None:
         """Previous step fully completed -> its log is no longer needed."""
         self._ops.clear()
         self._pool_snapshot = None
+        self._pool_undo = None
         self.steps_committed += 1
 
     def record(self, op: BlockOp) -> None:
@@ -43,20 +95,12 @@ class BlockLog:
     # -- pool consistency (the device-side half of §3.3) ----------------------
 
     def snapshot_pools(self, cache) -> None:
-        """Remember the paged-cache value at the step boundary.  The cache
-        is a pytree of immutable jax arrays, so this is an O(1) reference,
-        not a copy — the functional analogue of the block-op undo records:
-        restoring it discards every in-flight pool write exactly.
-
-        Memory note: between the step's first pool update and ``commit``
-        (one ``compute`` call — commit follows immediately), the pre-step
-        buffers stay pinned alongside the updated ones.  A functional
-        update holds input+output live anyway, so the snapshot adds no
-        extra peak today, but it does forbid donating/aliasing the pool
-        buffers into the update.  If that aliasing is ever wanted on TPU,
-        replace this with a row-level undo of just the step's write set
-        (write_bid/write_off + the prefill's block ids, all known at plan
-        time) — see ROADMAP paged-KV follow-ups."""
+        """Legacy strategy: remember the paged-cache value at the step
+        boundary.  The cache is a pytree of immutable jax arrays, so this
+        is an O(1) reference, not a copy — restoring it discards every
+        in-flight pool write exactly.  It pins the pre-step pool buffers,
+        which forbids donating/aliasing them into the compiled update;
+        row-level undo (below) is the donation-friendly replacement."""
         self._pool_snapshot = cache
 
     def take_pool_snapshot(self):
@@ -64,6 +108,16 @@ class BlockLog:
         snap = self._pool_snapshot
         self._pool_snapshot = None
         return snap
+
+    def record_pool_undo(self, undo) -> None:
+        """Row-level strategy: stash the captured write-set rows
+        (``cache_ops.capture_pool_rows``) for the in-flight step."""
+        self._pool_undo = undo
+
+    def take_pool_undo(self):
+        undo = self._pool_undo
+        self._pool_undo = None
+        return undo
 
     def __len__(self) -> int:
         return len(self._ops)
@@ -86,6 +140,13 @@ class BlockLog:
                 manager._set_ref(op.block_id, op.prev_ref)
             elif op.kind == "unref":
                 manager._set_ref(op.block_id, op.prev_ref)
+            elif op.kind == "cache_acquire":
+                manager._undo_cache_acquire(op.block_id, op.prev_ref)
+            elif op.kind == "hash_set":
+                manager._undo_register(op.block_id)
+            elif op.kind == "table_set":
+                idx, prev_bid = op.meta
+                tables[op.seq_id].blocks[idx] = prev_bid
             else:  # pragma: no cover
                 raise ValueError(op.kind)
         self._ops.clear()
@@ -93,7 +154,12 @@ class BlockLog:
 
 
 class BlockTable:
-    """Per-sequence ordered list of physical block ids (host metadata)."""
+    """Per-sequence ordered list of physical block ids (host metadata).
+
+    Entries may be *released* in place (sliding-window configs free
+    blocks the attention window has moved past): the slot keeps its
+    index — position ``p`` still maps to ``blocks[p // bs]`` — but
+    points at the pool's trash block, whose rows every reader masks."""
 
     def __init__(self, seq_id: int):
         self.seq_id = seq_id
@@ -109,25 +175,54 @@ class BlockTable:
             f"undo mismatch: table tail {self.blocks[-1:]} vs {block_id}"
         self.blocks.pop()
 
+    def set_block(self, index: int, block_id: int,
+                  log: Optional[BlockLog] = None) -> None:
+        """Replace entry ``index`` (window release / undo thereof)."""
+        prev = self.blocks[index]
+        self.blocks[index] = block_id
+        if log is not None:
+            log.record(BlockOp("table_set", block_id, self.seq_id,
+                               meta=(index, prev)))
+
     def num_blocks(self) -> int:
         return len(self.blocks)
 
 
 class BlockManager:
-    """Free-list block allocator with ref counts (prefix sharing ready)."""
+    """Free-list block allocator with ref counts + content-hash reuse."""
 
     def __init__(self, num_blocks: int, block_size: int):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref: Dict[int, int] = {}
+        # content-hash prefix cache
+        self._hash: Dict[bytes, int] = {}        # digest -> bid
+        self._bid_hash: Dict[int, bytes] = {}
+        self._bid_tokens: Dict[int, Tuple[int, ...]] = {}
+        self._bid_parent: Dict[int, bytes] = {}
+        self._children: Dict[bytes, set] = {}    # parent digest -> {bid}
+        # ref==0 blocks whose content is still cache-addressable (LRU)
+        self._cached_free: "OrderedDict[int, None]" = OrderedDict()
+        self.cache_hits = 0
+        self.cache_evictions = 0
 
     # -- public ops (logged) -------------------------------------------------
 
     def allocate(self, log: Optional[BlockLog] = None) -> int:
-        if not self._free:
+        if self._free:
+            bid = self._free.pop()
+        elif self._cached_free:
+            # evict the least-recently-parked cached block; its content
+            # is overwritten by the new owner (the row-level undo
+            # captures those rows, so rollback stays exact) — only the
+            # digest mapping is lost, which costs future hits, never
+            # correctness
+            bid, _ = self._cached_free.popitem(last=False)
+            self._drop_hash(bid)
+            self.cache_evictions += 1
+        else:
             raise RuntimeError("out of KV blocks")
-        bid = self._free.pop()
         self._ref[bid] = 1
         if log is not None:
             log.record(BlockOp("alloc", bid))
@@ -140,7 +235,10 @@ class BlockManager:
             log.record(BlockOp("free", block_id, prev_ref=prev))
         if prev == 1:
             del self._ref[block_id]
-            self._free.append(block_id)
+            if block_id in self._bid_hash:
+                self._cached_free[block_id] = None    # park, keep content
+            else:
+                self._free.append(block_id)
         else:
             self._ref[block_id] = prev - 1
 
@@ -151,6 +249,70 @@ class BlockManager:
             log.record(BlockOp("ref", block_id, prev_ref=prev))
         self._ref[block_id] = prev + 1
 
+    # -- prefix cache ---------------------------------------------------------
+
+    def lookup(self, digest: bytes) -> Optional[int]:
+        """The block holding this digest's content (None on miss).  Read
+        only — the block may be live (ref > 0) or parked cached-free."""
+        return self._hash.get(digest)
+
+    def acquire_cached(self, digest: bytes,
+                       log: Optional[BlockLog] = None) -> Optional[int]:
+        """Take a ref-counted share of the cached block for ``digest``.
+
+        A parked (ref==0) block is revived off the cached-free list; a
+        live one just gains a reference.  Returns None on miss."""
+        bid = self._hash.get(digest)
+        if bid is None:
+            return None
+        prev = self._ref.get(bid, 0)
+        if prev == 0:
+            del self._cached_free[bid]
+        self._ref[bid] = prev + 1
+        self.cache_hits += 1
+        if log is not None:
+            log.record(BlockOp("cache_acquire", bid, prev_ref=prev,
+                               meta=digest))
+        return bid
+
+    def register(self, bid: int, digest: bytes, parent: bytes,
+                 tokens: Sequence[int],
+                 log: Optional[BlockLog] = None) -> None:
+        """Publish a freshly written *full* block under its chain digest
+        (first writer wins; re-registration of a live digest is a no-op)."""
+        if digest in self._hash or bid in self._bid_hash:
+            return
+        assert self._ref.get(bid, 0) > 0, \
+            f"registering unallocated block {bid}"
+        self._hash[digest] = bid
+        self._bid_hash[bid] = digest
+        self._bid_tokens[bid] = tuple(int(t) for t in tokens)
+        self._bid_parent[bid] = parent
+        self._children.setdefault(parent, set()).add(bid)
+        if log is not None:
+            log.record(BlockOp("hash_set", bid, meta=digest))
+
+    def children_of(self, parent: bytes
+                    ) -> Iterable[Tuple[int, Tuple[int, ...]]]:
+        """(bid, tokens) of cached blocks whose prefix chain ends at
+        ``parent`` — the COW divergence candidates."""
+        for bid in self._children.get(parent, ()):
+            yield bid, self._bid_tokens[bid]
+
+    def _drop_hash(self, bid: int) -> None:
+        digest = self._bid_hash.pop(bid, None)
+        if digest is None:
+            return
+        if self._hash.get(digest) == bid:
+            del self._hash[digest]
+        parent = self._bid_parent.pop(bid)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.discard(bid)
+            if not kids:
+                del self._children[parent]
+        self._bid_tokens.pop(bid, None)
+
     # -- undo internals (called by BlockLog only) ------------------------------
 
     def _undo_alloc(self, block_id: int) -> None:
@@ -158,6 +320,9 @@ class BlockManager:
         assert ref >= 1, f"undo alloc of unallocated block {block_id}"
         if ref == 1:
             del self._ref[block_id]
+            # an eviction that fed this alloc is not replayed: the digest
+            # mapping is already gone (perf loss only, content restored
+            # by the row-level pool undo)
             self._free.append(block_id)
         else:
             self._ref[block_id] = ref - 1
@@ -166,8 +331,21 @@ class BlockManager:
         if block_id in self._ref:
             self._ref[block_id] = prev_ref
         else:
-            self._free.remove(block_id)
+            if block_id in self._cached_free:
+                del self._cached_free[block_id]
+            else:
+                self._free.remove(block_id)
             self._ref[block_id] = prev_ref
+
+    def _undo_cache_acquire(self, block_id: int, prev_ref: int) -> None:
+        if prev_ref == 0:
+            del self._ref[block_id]
+            self._cached_free[block_id] = None
+        else:
+            self._ref[block_id] = prev_ref
+
+    def _undo_register(self, block_id: int) -> None:
+        self._drop_hash(block_id)
 
     def _set_ref(self, block_id: int, ref: int) -> None:
         self._ref[block_id] = ref
@@ -182,10 +360,22 @@ class BlockManager:
         return len(self._free)
 
     @property
+    def num_allocatable(self) -> int:
+        """Blocks an allocation can claim: plain free + evictable cached."""
+        return len(self._free) + len(self._cached_free)
+
+    @property
     def num_allocated(self) -> int:
         return len(self._ref)
+
+    @property
+    def num_cached(self) -> int:
+        """Registered (content-addressable) blocks, live or parked."""
+        return len(self._bid_hash)
 
     def snapshot(self):
         """Hashable state snapshot (for property tests)."""
         return (tuple(sorted(self._free)),
-                tuple(sorted(self._ref.items())))
+                tuple(sorted(self._ref.items())),
+                tuple(sorted(self._cached_free)),
+                tuple(sorted((d, b) for d, b in self._hash.items())))

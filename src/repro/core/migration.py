@@ -27,7 +27,7 @@ layer-level checkpoints could leave inconsistent KV across layers.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, List, Sequence
+from typing import Any, List, Optional, Sequence
 
 from repro.serving.request import Request, RequestState
 
@@ -42,11 +42,15 @@ class KVBlocks:
     (L, 1, ...) per-slot recurrent state; the other kind is ``None``.
     """
     block_size: int
-    num_blocks: int              # nblk — blocks holding the valid prefix
+    num_blocks: int              # nblk — table span of the valid prefix
     valid_len: int               # cache positions 0..valid_len-1 are live
     pool_blocks: List[Any]
     state: List[Any]
     last_token: int              # feeds the target's next decode step
+    # per table index: False marks a window-released (dead) block — no
+    # payload rows ship for it and the target installs its trash
+    # sentinel instead of allocating a real block.  None = all live.
+    live_mask: Optional[List[bool]] = None
 
     @property
     def tokens_streamed(self) -> int:

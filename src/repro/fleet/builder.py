@@ -24,11 +24,13 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
                 force_policy: Optional[str] = None,
                 soft_patience: int = 1,
                 traffic=None, replenish_spares: bool = False,
-                kv_stream: bool = True) -> FleetRouter:
+                kv_stream: bool = True,
+                prefix_affinity: bool = False) -> FleetRouter:
     """``replenish_spares`` turns on background standby repair (one
     rebuild per router tick after an activation); ``kv_stream=False``
     forces token-replay re-prefill on every migration (the verified
-    fallback path)."""
+    fallback path); ``prefix_affinity`` biases admission so shared
+    prompt prefixes land on the instance whose block cache holds them."""
     if instances < 1:
         raise ValueError(f"instances must be >= 1, got {instances!r}")
     if spares < 0:
@@ -46,4 +48,5 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
         CostModel(members[0].engine.init_timings),
         force_policy=force_policy, soft_patience=soft_patience)
     return FleetRouter(members, spares=pool, arbiter=arbiter,
-                       traffic=traffic, kv_stream=kv_stream)
+                       traffic=traffic, kv_stream=kv_stream,
+                       prefix_affinity=prefix_affinity)

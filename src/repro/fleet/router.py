@@ -34,16 +34,37 @@ _MIN_TICK_S = 1e-4
 
 
 class FleetRouter:
+    # prefix-affinity knobs: each arrival is keyed under a ladder of
+    # leading-prefix lengths (longest match wins on lookup), so prompts
+    # sharing a system prefix shorter than the longest key — but
+    # diverging after it — still map to a common entry.  The matched
+    # arrival sticks to the instance that served the prefix last (its
+    # executors hold the shared blocks in their prefix caches), unless
+    # that instance is more than AFFINITY_SLACK requests busier than the
+    # least-loaded one — cache hits must not create hotspots
+    AFFINITY_LENS = (32, 16, 8)
+    AFFINITY_SLACK = 4
+    _AFFINITY_MAP_MAX = 4096
+
     def __init__(self, instances: List[FleetInstance], *,
                  spares: Optional[SparePool] = None,
                  arbiter: Optional[RecoveryArbiter] = None,
-                 traffic=None, kv_stream: bool = True):
+                 traffic=None, kv_stream: bool = True,
+                 prefix_affinity: bool = False):
         """``kv_stream=False`` forces the token-replay re-prefill path on
         every migration (the verified fallback — used by the fleet_slo
-        prefix sweep to measure what streaming saves)."""
+        prefix sweep to measure what streaming saves).
+        ``prefix_affinity=True`` routes arrivals with a recently seen
+        prompt prefix back to the same instance, so shared-prefix cache
+        hits land where the blocks live."""
         if not instances:
             raise ValueError("FleetRouter needs at least one instance")
+        from collections import OrderedDict
         self.kv_stream = kv_stream
+        self.prefix_affinity = prefix_affinity
+        # prefix key -> iid, LRU-bounded: one-off random prefixes age
+        # out individually without evicting the hot shared entries
+        self._affinity: "OrderedDict" = OrderedDict()
         self.instances: Dict[int, FleetInstance] = {
             i.iid: i for i in instances}
         if len(self.instances) != len(instances):
@@ -96,7 +117,7 @@ class FleetRouter:
             targets = self.serving()
         if not targets:
             raise RuntimeError("fleet has no serving instances left")
-        inst = min(targets, key=lambda i: i.load)
+        inst = self._route(targets, prompt_tokens)
         req = inst.submit(prompt_tokens, max_new_tokens,
                           eos_token=eos_token)
         self.requests.append(req)
@@ -106,6 +127,39 @@ class FleetRouter:
             "instances": [inst.iid],
         }
         return req
+
+    def _route(self, targets: List[FleetInstance],
+               prompt_tokens) -> FleetInstance:
+        """Least-loaded admission, biased toward prefix affinity: a
+        prompt whose leading tokens were recently served by a still-
+        available instance goes back there (its BlockManagers hold the
+        shared-prefix blocks), unless that instance is overloaded."""
+        least = min(targets, key=lambda i: i.load)
+        if not self.prefix_affinity:
+            return least
+        keys = []
+        for n in self.AFFINITY_LENS:
+            k = tuple(prompt_tokens[:n])
+            if k not in keys:                    # short prompts collapse
+                keys.append(k)
+        hit = None
+        for k in keys:                           # longest match wins
+            hit = self._affinity.get(k)
+            if hit is not None:
+                break
+        chosen = least
+        if hit is not None:
+            for inst in targets:
+                if (inst.iid == hit
+                        and inst.load <= least.load + self.AFFINITY_SLACK):
+                    chosen = inst
+                    break
+        for k in keys:
+            while len(self._affinity) >= self._AFFINITY_MAP_MAX:
+                self._affinity.popitem(last=False)   # evict LRU keys only
+            self._affinity[k] = chosen.iid
+            self._affinity.move_to_end(k)
+        return chosen
 
     def _pump(self) -> None:
         if self.traffic is None:

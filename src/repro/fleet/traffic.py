@@ -25,30 +25,59 @@ class Arrival:
 
 
 class PoissonTraffic:
-    """Memoryless open-loop arrivals at ``rate_per_s``, random prompts."""
+    """Memoryless open-loop arrivals at ``rate_per_s``, random prompts.
+
+    ``prompt_len`` may be a single length or a sequence of choices (a
+    mixed long/short workload — one is drawn per arrival).  With
+    ``shared_prefix_len`` > 0, a fraction ``shared_fraction`` of
+    arrivals start with one fixed random "system prompt" of that length
+    — the prefix-cache-heavy production shape."""
 
     def __init__(self, rate_per_s: float, vocab_size: int, *,
-                 prompt_len: int = 8, max_new_tokens: int = 16,
-                 seed: int = 0, limit: Optional[int] = None):
+                 prompt_len=8, max_new_tokens: int = 16,
+                 seed: int = 0, limit: Optional[int] = None,
+                 shared_prefix_len: int = 0,
+                 shared_fraction: float = 0.0):
         if rate_per_s <= 0:
             raise ValueError(f"rate_per_s must be > 0, got {rate_per_s!r}")
         self.rate = rate_per_s
         self.rng = np.random.default_rng(seed)
         self.vocab_size = vocab_size
-        self.prompt_len = prompt_len
+        self.prompt_lens = (tuple(prompt_len)
+                            if isinstance(prompt_len, (tuple, list))
+                            else (int(prompt_len),))
         self.max_new_tokens = max_new_tokens
         self.limit = limit
+        self.shared_fraction = shared_fraction
+        self.shared_prefix = tuple(
+            int(t) for t in self.rng.integers(0, vocab_size,
+                                              shared_prefix_len))
         self._next_at = float(self.rng.exponential(1.0 / self.rate))
         self._emitted = 0
+
+    def _prompt(self) -> Tuple[int, ...]:
+        n = int(self.rng.choice(self.prompt_lens))
+        if (self.shared_prefix
+                and self.rng.random() < self.shared_fraction):
+            # the drawn length is honored: short shared arrivals are a
+            # truncation of the system prompt (the repeated-short-query
+            # shape), long ones append a random user tail
+            if n <= len(self.shared_prefix):
+                return self.shared_prefix[:max(n, 1)]
+            tail = n - len(self.shared_prefix)
+            return self.shared_prefix + tuple(int(t) for t in
+                                              self.rng.integers(
+                                                  0, self.vocab_size, tail))
+        return tuple(int(t) for t in self.rng.integers(
+            0, self.vocab_size, n))
 
     def due(self, now_s: float) -> List[Arrival]:
         """All arrivals with at_s <= now_s that were not yet emitted."""
         out: List[Arrival] = []
         while self._next_at <= now_s and (
                 self.limit is None or self._emitted < self.limit):
-            prompt = tuple(int(t) for t in self.rng.integers(
-                0, self.vocab_size, self.prompt_len))
-            out.append(Arrival(self._next_at, prompt, self.max_new_tokens))
+            out.append(Arrival(self._next_at, self._prompt(),
+                               self.max_new_tokens))
             self._emitted += 1
             self._next_at += float(self.rng.exponential(1.0 / self.rate))
         return out

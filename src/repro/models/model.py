@@ -174,6 +174,21 @@ class Model:
             return None
         return MoE.default_runtime(self.cfg.moe)
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill runs prompt tokens as *virtual decode slots*
+        against the paged pools (``decode_step_paged`` over a per-token
+        page context), which requires every mixer to be attention (the
+        paged cache is then pure pools with no batch axis, so the same
+        cache pytree serves any chunk width).  Recurrent mixers (SSM,
+        hybrid periods) carry per-slot state that must be threaded
+        sequentially — those models keep whole-prompt prefills.  VLM /
+        audio prefills embed non-token inputs and are excluded too."""
+        if self.cfg.family in ("vlm", "audio"):
+            return False
+        return all(mixer == "attn"
+                   for _, _, mixer, _, _ in self.layer_groups())
+
     # -- moe application ----------------------------------------------------
 
     def _moe(self, p, x, runtime, cap):

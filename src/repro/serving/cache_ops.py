@@ -21,6 +21,7 @@ from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def infer_batch_axes(model, max_seq: int):
@@ -133,6 +134,79 @@ def gather_request_blocks(cache, axes_leaves: List[Optional[int]],
             pool_blocks.append(None)
             state.append(c[tuple(idx)])
     return pool_blocks, state
+
+
+def copy_block_prefixes(cache, axes_leaves: List[Optional[int]], copies):
+    """Copy the first ``n`` rows of source pool blocks into destination
+    blocks — the device half of prefix-cache copy-on-write at the
+    divergence block (each shared source keeps serving its owners; the
+    new request gets a private block holding the common prefix rows).
+
+    ``copies``: [(src_bid, dst_bid, n_tokens)].  All copies of a step
+    are batched into ONE row-wise gather/scatter per pool leaf (the
+    eager functional update rebuilds each leaf once regardless of how
+    many admissions COW'd this step).  State leaves (per-slot recurrent
+    state) are untouched: COW only exists on attention pools."""
+    if not copies:
+        return cache
+    src = np.concatenate([np.full((n,), s, np.int32)
+                          for s, _, n in copies])
+    dst = np.concatenate([np.full((n,), d, np.int32)
+                          for _, d, n in copies])
+    off = np.concatenate([np.arange(n, dtype=np.int32)
+                          for _, _, n in copies])
+    src = jnp.asarray(src)
+    dst = jnp.asarray(dst)
+    off = jnp.asarray(off)
+    c_leaves, treedef = jax.tree_util.tree_flatten(cache)
+    out = []
+    for c, ax in zip(c_leaves, axes_leaves):
+        if ax is None:
+            out.append(c.at[:, dst, off].set(c[:, src, off]))
+        else:
+            out.append(c)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def capture_pool_rows(cache, axes_leaves: List[Optional[int]], bids, offs):
+    """Gather the step's pool write set before it is overwritten.
+
+    ``bids``/``offs`` (NR,) address every (block, offset) row the planned
+    step will write (decode destinations, prefill-chunk rows, COW
+    copies, trash rows).  Pool leaves are gathered row-wise —
+    O(write set), not O(pool); per-slot state leaves are kept as O(1)
+    references to the immutable pre-step arrays (they are small and do
+    not block pool-buffer donation).  Returns the opaque undo payload
+    for :func:`restore_pool_rows`.
+    """
+    bids = jnp.asarray(bids, jnp.int32)
+    offs = jnp.asarray(offs, jnp.int32)
+    rows: List[Any] = []
+    state: List[Any] = []
+    for c, ax in zip(jax.tree_util.tree_flatten(cache)[0], axes_leaves):
+        if ax is None:
+            rows.append(c[:, bids, offs])
+            state.append(None)
+        else:
+            rows.append(None)
+            state.append(c)
+    return {"bids": bids, "offs": offs, "rows": rows, "state": state}
+
+
+def restore_pool_rows(cache, axes_leaves: List[Optional[int]], undo):
+    """Inverse of :func:`capture_pool_rows`: scatter the captured rows
+    back and swap the state leaves to their pre-step values — the §3.3
+    device-side rollback, touching only the step's write set."""
+    bids, offs = undo["bids"], undo["offs"]
+    c_leaves, treedef = jax.tree_util.tree_flatten(cache)
+    out = []
+    for c, ax, row, st in zip(c_leaves, axes_leaves, undo["rows"],
+                              undo["state"]):
+        if ax is None:
+            out.append(c.at[:, bids, offs].set(row))
+        else:
+            out.append(st)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def scatter_request_blocks(cache, axes_leaves: List[Optional[int]],

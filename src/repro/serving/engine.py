@@ -66,6 +66,16 @@ def _decode_closure(model: Model, version: int):
     return fn
 
 
+def _chunk_closure(model: Model, version: int):
+    # a chunked-prefill step IS a decode step over chunk-width virtual
+    # slots (per-token page context); only the compiled width differs
+    def fn(params, cache, tokens, page, runtime):
+        return model.decode_step_paged(params, cache, tokens, page, runtime)
+    fn.__name__ = f"chunk_v{version}"
+    fn.__qualname__ = fn.__name__
+    return fn
+
+
 def _prefill_closure(model: Model, version: int, max_seq: int):
     def fn(params, tokens, lengths, runtime):
         batch = {"tokens": tokens, "lengths": lengths}
@@ -96,6 +106,9 @@ class _Ctx:
     def decode_fn(self, *args):
         return self.engine.get_compiled("decode")( *args)
 
+    def chunk_fn(self):
+        return self.engine.get_compiled("chunk")
+
     def prefill_fn(self, bucket: int):
         return self.engine.get_compiled("prefill", bucket)
 
@@ -123,6 +136,23 @@ class EngineConfig:
     # through the fused Pallas dispatch->FFN->combine pipeline); None
     # keeps the model config's choice
     moe_impl: Optional[str] = None
+    # -- admission pipeline ---------------------------------------------------
+    # 'chunked': token-budget continuous batching — many prefills per
+    #   step, each chunked so long prompts interleave with decodes
+    #   (attention-only models; recurrent-state models whole-prefill
+    #   under the same budget).
+    # 'serial': the legacy one-whole-prefill-per-step baseline.
+    admission: str = "chunked"
+    prefill_chunk: int = 32             # batched chunk width (tokens)
+    # per-step decode+prefill token target; None -> max_batch + chunk
+    token_budget: Optional[int] = None
+    # content-hash shared-prefix block reuse across requests (COW at the
+    # divergence block); chunked admission only
+    prefix_cache: bool = True
+    # §3.3 device-pool rollback strategy: 'rows' restores only the
+    # step's captured write set (donation-friendly); 'snapshot' keeps
+    # the legacy O(1) functional reference to the whole cache
+    pool_undo: str = "rows"
 
     def __post_init__(self):
         # ValueError (not assert) so misconfiguration still fails loudly
@@ -151,6 +181,27 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.moe_impl must be one of "
                 f"{ModelConfig.MOE_IMPLS} or None, got {self.moe_impl!r}")
+        if self.admission not in ("chunked", "serial"):
+            raise ValueError(
+                f"EngineConfig.admission must be 'chunked' or 'serial', "
+                f"got {self.admission!r}")
+        if not isinstance(self.prefill_chunk, int) or self.prefill_chunk < 1:
+            raise ValueError(
+                f"EngineConfig.prefill_chunk must be a positive int, "
+                f"got {self.prefill_chunk!r}")
+        # None stays None here (resolved at executor construction from
+        # the *final* max_batch/prefill_chunk, so dataclasses.replace
+        # after construction cannot freeze a stale default)
+        if self.token_budget is not None and (
+                not isinstance(self.token_budget, int)
+                or self.token_budget < 1):
+            raise ValueError(
+                f"EngineConfig.token_budget must be a positive int or "
+                f"None, got {self.token_budget!r}")
+        if self.pool_undo not in ("rows", "snapshot"):
+            raise ValueError(
+                f"EngineConfig.pool_undo must be 'rows' or 'snapshot', "
+                f"got {self.pool_undo!r}")
 
 
 @dataclass
@@ -272,7 +323,14 @@ class InferenceEngine:
                     max_batch=ec.max_batch, max_seq=ec.max_seq,
                     num_blocks=ec.num_blocks, block_size=ec.block_size,
                     sampling=ec.sampling, ep_rank=ep_rank, shard=shard,
-                    paged_axes=self.paged_axes))
+                    paged_axes=self.paged_axes,
+                    admission=ec.admission,
+                    prefill_chunk=ec.prefill_chunk,
+                    token_budget=(ec.token_budget
+                                  if ec.token_budget is not None
+                                  else ec.max_batch + ec.prefill_chunk),
+                    prefix_cache=ec.prefix_cache,
+                    pool_undo=ec.pool_undo))
             self.moe_executors: List[MoEExecutor] = []
             if self.cfg.moe is not None and ec.mode == "disaggregated":
                 for j in range(ec.num_moe):
@@ -324,11 +382,13 @@ class InferenceEngine:
                                            page_context_specs)
         p_specs = _specs(self.params)
         r_specs = _specs(self.runtime)
-        if phase == "decode":
+        if phase in ("decode", "chunk"):
+            width = (self.ecfg.max_batch if phase == "decode"
+                     else self.ecfg.prefill_chunk)
             c_specs = self._cache_specs()
-            tok = jax.ShapeDtypeStruct((self.ecfg.max_batch,), jnp.int32)
+            tok = jax.ShapeDtypeStruct((width,), jnp.int32)
             page = page_context_specs(
-                self.ecfg.max_batch,
+                width,
                 max_blocks_per_seq(self.ecfg.max_seq, self.ecfg.block_size))
             return (p_specs, c_specs, tok, page, r_specs)
         toks = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
@@ -345,16 +405,19 @@ class InferenceEngine:
 
     def _compile_initial(self, t: Dict[str, float]) -> None:
         v = self.domain.version
-        key = ("decode", v, None)
-        fn = _decode_closure(self.model, v)
-        if key not in self.graph_cache:
-            _, tm = self.graph_cache.get_or_compile(
-                key, fn, self._arg_specs("decode"))
-            t["read_cache"] = t.get("read_cache", 0.0) + tm.read_cache_s
-            t["compile"] = t.get("compile", 0.0) + tm.compile_s
-        else:
-            self.graph_cache.get_or_compile(key, fn,
-                                            self._arg_specs("decode"))
+        phases = [("decode", _decode_closure(self.model, v))]
+        if self._chunking:
+            phases.append(("chunk", _chunk_closure(self.model, v)))
+        for phase, fn in phases:
+            key = (phase, v, None)
+            if key not in self.graph_cache:
+                _, tm = self.graph_cache.get_or_compile(
+                    key, fn, self._arg_specs(phase))
+                t["read_cache"] = t.get("read_cache", 0.0) + tm.read_cache_s
+                t["compile"] = t.get("compile", 0.0) + tm.compile_s
+            else:
+                self.graph_cache.get_or_compile(key, fn,
+                                                self._arg_specs(phase))
 
     def _precompile_failure_graphs(self) -> None:
         """§3.6: precompile graphs for the anticipated failure scenario
@@ -363,7 +426,15 @@ class InferenceEngine:
         self.graph_cache.precompile(
             ("decode", v, None), _decode_closure(self.model, v),
             self._arg_specs("decode"))
-        # the most common prefill bucket is needed right after migration
+        if self._chunking:
+            # chunked admission re-prefills migrated/rolled-back requests
+            # through the chunk graph — it must be ready post-failure
+            self.graph_cache.precompile(
+                ("chunk", v, None), _chunk_closure(self.model, v),
+                self._arg_specs("chunk"))
+            return
+        # whole-prefill path: the most common prefill bucket is needed
+        # right after migration
         b = next_bucket(16, self.ecfg.max_seq)
         self.graph_cache.precompile(
             ("prefill", v, b),
@@ -373,6 +444,11 @@ class InferenceEngine:
             self.graph_cache.precompile(
                 ("install", 0, b), _install_closure(self.paged_axes, b),
                 self._arg_specs("install", b))
+
+    @property
+    def _chunking(self) -> bool:
+        return (self.ecfg.admission == "chunked"
+                and self.model.supports_chunked_prefill)
 
     # -- compiled-fn access ------------------------------------------------------
 
@@ -386,6 +462,8 @@ class InferenceEngine:
             return fn
         if phase == "decode":
             fn = _decode_closure(self.model, v)
+        elif phase == "chunk":
+            fn = _chunk_closure(self.model, v)
         elif phase == "install":
             fn = _install_closure(self.paged_axes, bucket)
         else:
@@ -538,6 +616,22 @@ class InferenceEngine:
         return sum(1 for r in self.all_requests
                    if r.state not in (RequestState.FINISHED,
                                       RequestState.FAILED))
+
+    def prefill_stats(self) -> Dict[str, int]:
+        """Aggregated admission-pipeline counters across attention ranks:
+        prefill tokens actually computed vs skipped via the shared-prefix
+        cache, chunk count, window-freed blocks, and the BlockManagers'
+        cache acquire/eviction counters."""
+        out: Dict[str, int] = {}
+        for ex in self.dp_executors:
+            for k, val in ex.scheduler.stats.items():
+                out[k] = out.get(k, 0) + val
+            out["prefix_cache_hits"] = (out.get("prefix_cache_hits", 0)
+                                        + ex.block_manager.cache_hits)
+            out["prefix_cache_evictions"] = (
+                out.get("prefix_cache_evictions", 0)
+                + ex.block_manager.cache_evictions)
+        return out
 
     # -- main loop --------------------------------------------------------------------
 

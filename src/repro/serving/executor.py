@@ -3,33 +3,39 @@
 A DPExecutor owns a local scheduler and the paged serving cache: block
 pools (one trailing trash block for idle batch slots) addressed through
 the ``BlockManager``/``BlockTable`` accounting, with the §3.3 undo log
-covering both the host-side block ops and (via a functional snapshot)
-the device-side pool writes.  Prefill scatters raw K/V into a request's
-blocks; decode attends through per-step paging arrays
-(``kvcache.build_page_context``) that ride into the compiled step as
-data, so continuous batching and recovery never retrigger compilation.
+covering both the host-side block ops and the device-side pool writes
+(row-level write-set capture by default; the legacy O(1) functional
+snapshot as fallback).  Prefill runs as batched multi-request *chunks*
+— prompt tokens become virtual decode slots against the pools, ragged
+across requests purely as paging data — on attention-only models;
+recurrent-state models keep whole-prompt installs.  Decode attends
+through per-step paging arrays (``kvcache.build_page_context``) that
+ride into the compiled step as data, so continuous batching and
+recovery never retrigger compilation.
 
 Steps are two-phase to model collective lockstep: ``plan`` (host work —
-admission, block allocation, all logged) then ``compute`` (the device
-step).  A fault between the phases leaves an uncommitted log, which
-recovery rolls back (§3.3) — block tables from the op log, pools from
-the snapshot.
+admission, block allocation, prefix-cache sharing, all logged) then
+``compute`` (the device step).  A fault between the phases leaves an
+uncommitted log, which recovery rolls back (§3.3) — block tables from
+the op log, pools by scattering the captured write-set rows back.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.block_log import BlockLog, BlockManager, BlockTable
 from repro.core.migration import KVBlocks
-from repro.serving.cache_ops import (gather_request_blocks,
-                                     infer_paged_axes,
+from repro.serving.cache_ops import (capture_pool_rows,
+                                     copy_block_prefixes,
+                                     gather_request_blocks,
+                                     infer_paged_axes, restore_pool_rows,
                                      scatter_request_blocks)
-from repro.serving.kvcache import (build_page_context, max_blocks_per_seq,
-                                   padded_block_ids)
+from repro.serving.kvcache import (build_chunk_context, build_page_context,
+                                   max_blocks_per_seq, padded_block_ids)
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import LocalScheduler, StepPlan
@@ -70,7 +76,12 @@ class DPExecutor:
                  block_size: int, sampling: SamplingParams,
                  ep_rank: Optional[int] = None,
                  shard: Optional[Dict[str, np.ndarray]] = None,
-                 paged_axes: Optional[list] = None):
+                 paged_axes: Optional[list] = None,
+                 admission: str = "chunked",
+                 prefill_chunk: int = 32,
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 pool_undo: str = "rows"):
         self.physical_id = physical_id
         self.dp_rank = dp_rank
         self.model = model
@@ -89,8 +100,20 @@ class DPExecutor:
         self.trash_block = num_blocks      # the extra pool row (see model)
         self.block_manager = BlockManager(num_blocks, block_size)
         self.block_log = BlockLog()
-        self.scheduler = LocalScheduler(max_batch, max_seq,
-                                        self.block_manager)
+        self.admission = admission
+        self.pool_undo = pool_undo
+        # chunked prefill needs a batch-width-free cache (attention-only
+        # pools); recurrent-state models fall back to whole-prompt installs
+        chunk = (prefill_chunk if admission == "chunked"
+                 and model.supports_chunked_prefill else 0)
+        self.chunk_tokens = chunk
+        self.scheduler = LocalScheduler(
+            max_batch, max_seq, self.block_manager,
+            token_budget=(token_budget if admission == "chunked" else None),
+            chunk_tokens=chunk,
+            prefix_cache=prefix_cache and chunk > 0,
+            window=model.cfg.sliding_window or None,
+            max_prefills=1 if admission == "serial" else None)
         self.cache = model.init_paged_cache(max_batch, num_blocks,
                                             block_size)
         if paged_axes is None:   # the engine passes its shared copy in
@@ -143,10 +166,76 @@ class DPExecutor:
 
     def plan(self) -> StepPlan:
         self.block_log.begin_step()
-        # §3.3 device half: the pool value at the step boundary
-        self.block_log.snapshot_pools(self.cache)
-        self._plan = self.scheduler.plan_step(self.block_log)
-        return self._plan
+        plan = self.scheduler.plan_step(self.block_log)
+        if self.cache is not None:
+            # §3.3 device half: either the O(1) functional snapshot of
+            # the whole cache (legacy; pins the pre-step pool buffers),
+            # or — default — capture exactly the rows this step will
+            # write, known at plan time, so rollback is O(write set) and
+            # the pool buffers stay donation-friendly on TPU
+            if self.pool_undo == "snapshot":
+                self.block_log.snapshot_pools(self.cache)
+            else:
+                bids, offs = self._write_manifest(plan)
+                self.block_log.record_pool_undo(capture_pool_rows(
+                    self.cache, self.paged_axes, bids, offs))
+            # prefix-cache COW: seed private divergence blocks from the
+            # shared sources *after* the capture (the copies are part of
+            # the step's write set and roll back with it); one batched
+            # row scatter covers every COW admission of the step
+            self.cache = copy_block_prefixes(self.cache, self.paged_axes,
+                                             plan.cow_copies)
+        self._plan = plan
+        return plan
+
+    def _write_manifest(self, plan: StepPlan
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Every (block, offset) pool row the planned step writes: decode
+        destinations for all batch slots (idle slots hit the trash row),
+        each chunk token's slot, whole-prefill installs (their padded
+        block scatter covers every offset), and COW destination rows."""
+        bs = self.block_size
+        tables = self.scheduler.block_tables
+        bids: List[int] = []
+        offs: List[int] = []
+        if plan.decode:
+            row_bid = [self.trash_block] * self.max_batch
+            row_off = [0] * self.max_batch
+            for req in plan.decode:
+                wp = req.num_tokens - 1
+                blocks = tables[req.req_id].blocks
+                row_bid[req.batch_slot] = blocks[wp // bs]
+                row_off[req.batch_slot] = wp % bs
+            bids += row_bid
+            offs += row_off
+        if plan.chunks:
+            n = 0
+            for piece in plan.chunks:
+                blocks = tables[piece.req.req_id].blocks
+                for j in range(piece.length):
+                    pos = piece.start + j
+                    bids.append(blocks[pos // bs])
+                    offs.append(pos % bs)
+                n += piece.length
+            for _ in range(self.chunk_tokens - n):   # idle chunk rows
+                bids.append(self.trash_block)
+                offs.append(0)
+        out_b = [np.asarray(bids, np.int32)]
+        out_o = [np.asarray(offs, np.int32)]
+        for req in plan.prefills:
+            # the install scatter writes every offset of every padded
+            # block id (bucket-sized, trash repeats included)
+            bucket = next_bucket(len(req.tokens_so_far), self.max_seq)
+            nblk = max_blocks_per_seq(bucket, bs)
+            pb = padded_block_ids(tables[req.req_id].blocks, nblk,
+                                  self.trash_block)
+            out_b.append(np.repeat(pb, bs))
+            out_o.append(np.tile(np.arange(bs, dtype=np.int32), nblk))
+        for _, dst, n in plan.cow_copies:
+            out_b.append(np.full((n,), dst, np.int32))
+            out_o.append(np.arange(n, dtype=np.int32))
+        return (np.concatenate(out_b).astype(np.int32),
+                np.concatenate(out_o).astype(np.int32))
 
     def compute(self, ctx, step_no: int) -> List[Request]:
         """Run the planned step on device; returns finished requests."""
@@ -155,8 +244,38 @@ class DPExecutor:
         finished: List[Request] = []
         params, runtime = ctx.params, ctx.runtime
 
-        if plan.prefill is not None:
-            req = plan.prefill
+        if plan.chunks:
+            tokens, page = build_chunk_context(
+                plan.chunks, self.scheduler.block_tables,
+                width=self.chunk_tokens, max_blk=self.max_blk,
+                block_size=self.block_size, trash_block=self.trash_block)
+            logits, self.cache = ctx.chunk_fn()(
+                params, self.cache, tokens, page, runtime)
+            logits = np.asarray(logits)
+            row = 0
+            for piece in plan.chunks:
+                req = piece.req
+                req.prefill_pos = piece.start + piece.length
+                self.scheduler.note_chunk_done(piece, self.block_log)
+                if piece.last:
+                    # seed by sequence position, not engine step: the
+                    # token is a pure function of (seed, prefix,
+                    # position) and survives replay on any executor of
+                    # any fleet instance
+                    tok = int(sample(logits[row + piece.length - 1][None],
+                                     self.sampling,
+                                     step=req.num_tokens)[0])
+                    req.output_tokens.append(tok)
+                    req.note_token()
+                    req.state = RequestState.RUNNING
+                    self.last_token[req.batch_slot] = tok
+                    if req.done or req.num_tokens >= self.max_seq:
+                        self.scheduler.finish(req, self.block_log)
+                        req.finish_time = time.monotonic()
+                        finished.append(req)
+                row += piece.length
+
+        for req in plan.prefills:
             toks = req.tokens_so_far
             bucket = next_bucket(len(toks), self.max_seq)
             padded = np.zeros((1, bucket), np.int32)
@@ -171,9 +290,8 @@ class DPExecutor:
             install_fn = ctx.install_fn(bucket)
             self.cache = install_fn(self.cache, raw, bids,
                                     np.int32(req.batch_slot))
-            # seed by sequence position, not engine step: the token is a
-            # pure function of (seed, prefix, position) and survives
-            # replay on any executor of any fleet instance
+            req.prefill_pos = len(toks)
+            self.scheduler.note_prefill_done(len(toks))
             tok = int(sample(np.asarray(last_logits), self.sampling,
                              step=req.num_tokens)[0])
             req.output_tokens.append(tok)
@@ -220,25 +338,22 @@ class DPExecutor:
 
     def rollback_inflight(self) -> int:
         """§3.3: undo all block ops of the in-flight (uncommitted) step —
-        host block tables from the op log, device pools from the step-
-        boundary snapshot (any in-flight pool write is discarded with it,
-        so table and pool agree exactly on which rows are live)."""
+        host block tables from the op log, device pools by restoring the
+        step's captured write-set rows (or the legacy step-boundary
+        snapshot), so table and pool agree exactly on which rows are
+        live."""
+        undo = self.block_log.take_pool_undo()
         snap = self.block_log.take_pool_snapshot()
-        if snap is not None and self.cache is not None:
-            self.cache = snap
+        if self.cache is not None:
+            if undo is not None:
+                self.cache = restore_pool_rows(self.cache, self.paged_axes,
+                                               undo)
+            elif snap is not None:
+                self.cache = snap
         n = self.block_log.undo_all(self.block_manager,
                                     self.scheduler.block_tables)
-        # admissions from the aborted step (their allocs were all undone,
-        # leaving an empty block table) return to the waiting queue
-        aborted = [r for r in self.scheduler.running
-                   if self.scheduler.block_tables[r.req_id].num_blocks() == 0]
-        for r in aborted:
-            self.scheduler.running.remove(r)
-            del self.scheduler.block_tables[r.req_id]
-            if r.batch_slot is not None:
-                self.scheduler._free_slots.append(r.batch_slot)
-                r.batch_slot = None
-            self.scheduler.requeue_front(r)
+        # admissions from the aborted step return to the waiting queue
+        self.scheduler.rollback_aborted()
         self._plan = None
         return n
 
@@ -248,11 +363,16 @@ class DPExecutor:
         """Extract a RUNNING request's live blocks + recurrent state.
 
         None when this device's state is unreachable or the request has
-        no installed KV yet (still WAITING, or mid-migration) — callers
-        fall back to token-replay re-prefill."""
+        no installed KV yet (still WAITING, mid-chunked-prefill, or
+        mid-migration) — callers fall back to token-replay re-prefill.
+        Prefix-shared blocks are read in place (sharing is refcounted;
+        a gather never mutates), and window-released table entries ship
+        trash rows the target's attention window masks identically."""
         if self.cache is None or not self.alive:
             return None
         if req.state is not RequestState.RUNNING or req.batch_slot is None:
+            return None
+        if self.scheduler.prefilling(req):
             return None
         table = self.scheduler.block_tables.get(req.req_id)
         if table is None or not req.output_tokens:
@@ -262,15 +382,20 @@ class DPExecutor:
             return None
         nblk = (valid_len + self.block_size - 1) // self.block_size
         bids = table.blocks[:nblk]
+        # window-released entries are trash sentinels: ship no rows for
+        # them (their positions are below the attention window forever)
+        live_mask = [b < self.num_blocks for b in bids]
+        live_bids = [b for b in bids if b < self.num_blocks]
         pools, state = gather_request_blocks(self.cache, self.paged_axes,
-                                             bids, req.batch_slot)
+                                             live_bids, req.batch_slot)
         return KVBlocks(
             block_size=self.block_size, num_blocks=nblk,
             valid_len=valid_len,
             pool_blocks=[None if p is None else np.asarray(p)
                          for p in pools],
             state=[None if s is None else np.asarray(s) for s in state],
-            last_token=int(req.output_tokens[-1]))
+            last_token=int(req.output_tokens[-1]),
+            live_mask=live_mask)
 
     def import_kv_blocks(self, req: Request, kv: KVBlocks) -> bool:
         """Install streamed blocks: allocate fresh physical blocks here,
@@ -283,23 +408,34 @@ class DPExecutor:
             return False
         if not self.scheduler._free_slots:
             return False
-        need = max(kv.num_blocks, self.scheduler._blocks_needed(
+        span = max(kv.num_blocks, self.scheduler._blocks_needed(
             min(req.num_tokens + 1, self.max_seq)))
-        if self.block_manager.num_free < need:
+        live = (kv.live_mask if kv.live_mask is not None
+                else [True] * kv.num_blocks)
+        # dead (window-released) table entries install as trash
+        # sentinels here too — only live payload blocks and the growth
+        # region past the payload need real allocations
+        need = sum(live) + (span - kv.num_blocks)
+        if self.block_manager.num_allocatable < need:
             return False
         # host accounting mirrors admission; import runs at a step
         # boundary, so the ops commit immediately (log=None)
         table = BlockTable(req.req_id)
-        for _ in range(need):
-            table.append_block(self.block_manager.allocate())
+        for j in range(span):
+            if j < kv.num_blocks and not live[j]:
+                table.append_block(self.trash_block)
+            else:
+                table.append_block(self.block_manager.allocate())
         self.scheduler.block_tables[req.req_id] = table
         req.batch_slot = self.scheduler._free_slots.pop()
         req.dp_rank = self.dp_rank
         req.state = RequestState.RUNNING
         self.scheduler.running.append(req)
+        self.scheduler.register_imported(req)
+        live_ids = [table.blocks[j] for j in range(kv.num_blocks)
+                    if live[j]]
         self.cache = scatter_request_blocks(
             self.cache, self.paged_axes, kv.pool_blocks, kv.state,
-            np.asarray(table.blocks[:kv.num_blocks], np.int32),
-            req.batch_slot)
+            np.asarray(live_ids, np.int32), req.batch_slot)
         self.last_token[req.batch_slot] = kv.last_token
         return True

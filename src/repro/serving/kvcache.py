@@ -69,6 +69,47 @@ def build_page_context(decode_reqs, block_tables, *, max_batch: int,
             "write_bid": write_bid, "write_off": write_off}
 
 
+def build_chunk_context(pieces, block_tables, *, width: int, max_blk: int,
+                        block_size: int, trash_block: int):
+    """Pack a batched multi-request prefill chunk into paging arrays.
+
+    A chunked prefill step is a decode step over ``width`` *virtual
+    slots*: row ``r`` carries one prompt token, its owner's block table,
+    ``seq_lens`` = its absolute position + 1 (so causal attention over
+    the pool covers the already-installed prefix AND earlier rows of the
+    same chunk, whose K/V land in the pool before attention runs), and
+    the (block, offset) its own K/V is written to.  Requests of any
+    length mix freely in one chunk — raggedness is pure data, so the
+    compiled graph never re-specializes.  Rows past the planned tokens
+    are idle: seq_len 0, writes into the trash block.
+
+    ``pieces``: objects with ``.req`` (owning Request), ``.start``
+    (first position this step), ``.length`` and ``.tokens`` (the full
+    token sequence being prefilled).  Returns ``(tokens, page)``.
+    """
+    tokens = np.zeros((width,), np.int32)
+    tables = np.zeros((width, max_blk), np.int32)
+    seq_lens = np.zeros((width,), np.int32)
+    write_bid = np.full((width,), trash_block, np.int32)
+    write_off = np.zeros((width,), np.int32)
+    row = 0
+    for piece in pieces:
+        blocks = block_tables[piece.req.req_id].blocks
+        packed = np.asarray(blocks[:max_blk], np.int32)
+        for j in range(piece.length):
+            pos = piece.start + j
+            tokens[row] = piece.tokens[pos]
+            tables[row, : len(packed)] = packed
+            seq_lens[row] = pos + 1
+            write_bid[row] = blocks[pos // block_size]
+            write_off[row] = pos % block_size
+            row += 1
+    assert row <= width, (row, width)
+    page = {"tables": tables, "seq_lens": seq_lens,
+            "write_bid": write_bid, "write_off": write_off}
+    return tokens, page
+
+
 def page_context_specs(max_batch: int, max_blk: int):
     i32 = jnp.int32
     return {

@@ -36,6 +36,11 @@ class Request:
     migrations: int = 0                  # how many times recovery moved us
     cross_instance_migrations: int = 0   # moved to a different fleet instance
     recomputed_tokens: int = 0           # decode work redone due to recovery
+    # chunked-prefill progress: prompt positions [0, prefill_pos) have
+    # their KV installed (prefix-cache hits count — they skip compute).
+    # A RUNNING request only joins the decode batch once prefill_pos
+    # reaches its admission-time prefill target.
+    prefill_pos: int = 0
 
     @property
     def tokens_so_far(self) -> List[int]:
@@ -72,4 +77,5 @@ class Request:
         self.migrations += 1
         self.dp_rank = None
         self.batch_slot = None
+        self.prefill_pos = 0
         return self

@@ -1,44 +1,113 @@
 """Continuous-batching local scheduler (one per DPExecutor).
 
-Decides, each generation step, which sequences prefill/decode, and drives
-all paged-KV block accounting through the (logged) BlockManager so that a
+Plans a **token budget per step** (vLLM-style): every ongoing decode
+costs one token, and the remaining budget admits prefill work — many
+requests per step, each *chunked* so a long prompt interleaves with
+ongoing decodes instead of stalling them.  Models whose prefill cannot
+be chunked (recurrent state: SSM / hybrid) fall back to whole-prompt
+prefills, still admitted under the same budget.
+
+The scheduler also drives the content-hash **shared-prefix cache**:
+admission matches the prompt's full blocks against the BlockManager's
+digest index (ref-counted reuse, those tokens skip prefill compute
+entirely) and plans a copy-on-write of the divergence block when a
+cached block shares only the first few tokens.
+
+All block accounting flows through the (logged) BlockManager so that a
 mid-step failure can be rolled back exactly (§3.3).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.block_log import BlockLog, BlockManager, BlockTable
+from repro.core.block_log import (ROOT_DIGEST, BlockLog, BlockManager,
+                                  BlockTable, prompt_digests)
 from repro.serving.request import Request, RequestState
 
 
 @dataclass
+class ChunkPiece:
+    """One request's slice of this step's batched prefill chunk."""
+    req: Request
+    start: int                 # first position computed this step
+    length: int                # tokens computed this step
+    tokens: Tuple[int, ...]    # the full sequence being prefilled
+    last: bool                 # completes the prefill -> sample a token
+
+
+@dataclass
 class StepPlan:
-    prefill: Optional[Request] = None
+    chunks: List[ChunkPiece] = field(default_factory=list)
+    prefills: List[Request] = field(default_factory=list)  # whole-prompt
     decode: List[Request] = field(default_factory=list)
+    # (src_bid, dst_bid, n_tokens) device copies for prefix-cache COW
+    cow_copies: List[Tuple[int, int, int]] = field(default_factory=list)
+
+    @property
+    def prefill(self) -> Optional[Request]:
+        """Legacy convenience: the first whole-prompt admission."""
+        return self.prefills[0] if self.prefills else None
 
     @property
     def empty(self) -> bool:
-        return self.prefill is None and not self.decode
+        return not (self.chunks or self.prefills or self.decode)
+
+
+@dataclass
+class _SeqInfo:
+    """Host-side prefill bookkeeping for one admitted request."""
+    tokens: Tuple[int, ...]
+    target: int                # tokens [0, target) must be installed
+    digests: List[bytes] = field(default_factory=list)
+    next_register: int = 0     # first block index not yet hash-published
+    cached_tokens: int = 0     # prefix-cache hit length (skipped compute)
+    counted: bool = False      # cached_tokens folded into stats yet?
+    released_upto: int = 0     # blocks [0, released_upto) window-freed
 
 
 class LocalScheduler:
     def __init__(self, max_batch: int, max_seq: int,
-                 block_manager: BlockManager):
+                 block_manager: BlockManager, *,
+                 token_budget: Optional[int] = None,
+                 chunk_tokens: int = 0,
+                 prefix_cache: bool = False,
+                 window: Optional[int] = None,
+                 max_prefills: Optional[int] = None):
+        """``token_budget``: per-step decode+prefill token target (None =
+        unbounded).  ``chunk_tokens`` > 0 enables chunked prefill with
+        that batched-chunk width; 0 selects whole-prompt prefills.
+        ``prefix_cache`` turns on content-hash block reuse (chunked path
+        only).  ``window`` frees blocks the sliding attention window has
+        passed.  ``max_prefills`` caps whole-prompt admissions per step
+        (1 = the legacy one-prefill-per-step engine)."""
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.block_manager = block_manager
+        self.token_budget = token_budget
+        self.chunk_tokens = chunk_tokens
+        self.prefix_cache = prefix_cache and chunk_tokens > 0
+        self.window = window
+        self.max_prefills = max_prefills
         self.waiting: deque[Request] = deque()
         self.running: List[Request] = []
         self.block_tables: Dict[int, BlockTable] = {}
         self._free_slots = list(range(max_batch - 1, -1, -1))
+        self._seq: Dict[int, _SeqInfo] = {}
+        self._digest_cache: Dict[int, List[bytes]] = {}
+        self.stats = {"prefill_tokens_computed": 0,
+                      "prefill_tokens_cached": 0,
+                      "prefill_chunks": 0,
+                      "blocks_window_freed": 0}
 
     # -- queue management -----------------------------------------------------
 
     def add_request(self, req: Request) -> None:
         req.state = RequestState.WAITING
+        req.prefill_pos = 0
+        self._seq.pop(req.req_id, None)
+        self._digest_cache.pop(req.req_id, None)
         self.waiting.append(req)
 
     def drain(self) -> List[Request]:
@@ -48,14 +117,43 @@ class LocalScheduler:
         for r in list(self.running):
             self._release(r, log=None)
         self.running.clear()
+        self._digest_cache.clear()   # waiting heads memoized here too
         return reqs
 
     def requeue_front(self, req: Request) -> None:
         """Requeue-after-export: a request whose step was rolled back (or
         that came back from a failed export) re-enters at the queue front
-        so its completed decode prefix is re-prefilled before new work."""
+        so its completed decode prefix is re-prefilled before new work.
+        Re-admission runs through the normal budgeted path, so the
+        requeued prefill is charged against the step token budget like
+        any other arrival."""
         req.state = RequestState.WAITING
+        req.prefill_pos = 0
+        self._seq.pop(req.req_id, None)
+        self._digest_cache.pop(req.req_id, None)
         self.waiting.appendleft(req)
+
+    def rollback_aborted(self) -> List[Request]:
+        """After ``BlockLog.undo_all``: admissions from the aborted step
+        (their allocs were all undone, leaving an empty block table)
+        return to the waiting queue front."""
+        aborted = [r for r in self.running
+                   if self.block_tables[r.req_id].num_blocks() == 0]
+        for r in aborted:
+            self.running.remove(r)
+            del self.block_tables[r.req_id]
+            if r.batch_slot is not None:
+                self._free_slots.append(r.batch_slot)
+                r.batch_slot = None
+            self.requeue_front(r)
+        return aborted
+
+    def register_imported(self, req: Request) -> None:
+        """Adopt a KV-block-streamed request (import path): its prefix is
+        fully installed, so it decodes on the next step."""
+        toks = tuple(req.tokens_so_far)
+        req.prefill_pos = len(toks)
+        self._seq[req.req_id] = _SeqInfo(tokens=toks, target=len(toks))
 
     def check_consistent(self) -> None:
         """Invariant check used by tests and cross-instance migration:
@@ -80,44 +178,316 @@ class LocalScheduler:
     def num_requests(self) -> int:
         return len(self.waiting) + len(self.running)
 
+    def prefilling(self, req: Request) -> bool:
+        info = self._seq.get(req.req_id)
+        return info is not None and req.prefill_pos < info.target
+
+    def prefill_target(self, req: Request) -> int:
+        return self._seq[req.req_id].target
+
     # -- step planning ----------------------------------------------------------
 
     def _blocks_needed(self, n_tokens: int) -> int:
         bs = self.block_manager.block_size
         return (n_tokens + bs - 1) // bs
 
-    def plan_step(self, log: BlockLog) -> StepPlan:
-        """Admit at most one prefill per step (vLLM-style), decode the rest.
+    @property
+    def _trash(self) -> int:
+        """Released table entries point at the pool's trash row (always
+        masked by the window lower bound — readers never see it)."""
+        return self.block_manager.num_blocks
 
-        All block allocations are recorded in ``log``.
+    def plan_step(self, log: BlockLog) -> StepPlan:
+        """Plan one generation step under the token budget.
+
+        All block allocations / releases / cache acquisitions are
+        recorded in ``log`` so a mid-step fault rolls back exactly.
         """
         plan = StepPlan()
-        # decode bookkeeping first: growing sequences may need a new block
+        budget = (self.token_budget if self.token_budget is not None
+                  else float("inf"))
+        # 1. ongoing decodes first: a growing sequence may need a new
+        #    block; sequences the window moved past release old ones
         for req in self.running:
-            if req.done:
+            if req.done or self.prefilling(req):
                 continue
             pos = req.num_tokens  # position the next token will occupy
+            # this step writes position pos - 1 and attends seq_len = pos
+            # (build_page_context): release strictly below pos - window
+            # BEFORE growing — at pool exhaustion the request's own dead
+            # blocks must be able to feed its next allocation
+            self._release_out_of_window(req, pos, log)
             table = self.block_tables[req.req_id]
             if self._blocks_needed(pos + 1) > table.num_blocks():
                 bid = self.block_manager.allocate(log)
                 table.append_block(bid, log)
             plan.decode.append(req)
-        # admission
-        if self.waiting and self._free_slots:
-            req = self.waiting[0]
-            need = self._blocks_needed(
-                min(req.num_tokens + 1, self.max_seq))
-            if self.block_manager.num_free >= need:
-                self.waiting.popleft()
-                table = BlockTable(req.req_id)
-                for _ in range(need):
-                    table.append_block(self.block_manager.allocate(log), log)
-                self.block_tables[req.req_id] = table
-                req.state = RequestState.RUNNING
-                req.batch_slot = self._free_slots.pop()
-                self.running.append(req)
-                plan.prefill = req
+        budget -= len(plan.decode)
+
+        # 2. continue in-flight chunked prefills (admission order)
+        room = self.chunk_tokens
+        for req in self.running:
+            if room <= 0 or budget <= 0:
+                break
+            info = self._seq.get(req.req_id)
+            if info is None or req.prefill_pos >= info.target:
+                continue
+            take = int(min(info.target - req.prefill_pos, room, budget))
+            # windowed prompts: blocks every remaining chunk token has
+            # already slid past are dead — free them BEFORE growing the
+            # table, so an exhausted pool refills from the request's own
+            # dead blocks instead of livelocking with take clamped to 0
+            self._release_out_of_window(req, req.prefill_pos + 1, log)
+            take = self._ensure_coverage(req, take, log)
+            if take < 1:
+                continue
+            self._plan_piece(plan, req, info, take, log)
+            room -= take
+            budget -= take
+
+        # 3. admissions
+        while self.waiting and self._free_slots:
+            if self.chunk_tokens > 0:
+                if room <= 0 or budget <= 0:
+                    break
+                cap = room if budget == float("inf") else min(
+                    room, int(budget))
+                take = self._admit_chunked(plan, self.waiting[0], cap, log)
+                if take is None:
+                    break       # FIFO: blocked head defers the rest
+                room -= take
+                budget -= take
+            else:
+                if (self.max_prefills is not None
+                        and len(plan.prefills) >= self.max_prefills):
+                    break
+                # the first whole-prompt prefill may overflow the budget
+                # (a prompt longer than the budget must still admit);
+                # later ones need headroom
+                req = self.waiting[0]
+                cost = len(req.tokens_so_far)
+                if plan.prefills and budget < cost:
+                    break
+                if not self._admit_whole(req, log):
+                    break
+                plan.prefills.append(req)
+                budget -= cost
         return plan
+
+    # -- admission internals -----------------------------------------------------
+
+    def _ensure_coverage(self, req: Request, take: int,
+                         log: BlockLog) -> int:
+        """Grow the block table to cover the next chunk piece.
+
+        Windowed prompts allocate lazily (admission only covered the
+        first piece), so a long prompt never holds O(prompt) blocks —
+        paired with the in-prefill window release, occupancy stays
+        O(window + chunk).  When the pool cannot cover the whole piece,
+        the piece shrinks to what fits (the request resumes next step)."""
+        table = self.block_tables[req.req_id]
+        bs = self.block_manager.block_size
+        need = self._blocks_needed(req.prefill_pos + take)
+        grow = need - table.num_blocks()
+        if grow > 0:
+            grow = min(grow, self.block_manager.num_allocatable)
+            for _ in range(grow):
+                table.append_block(self.block_manager.allocate(log), log)
+            take = min(take, table.num_blocks() * bs - req.prefill_pos)
+        return take
+
+    def _plan_piece(self, plan: StepPlan, req: Request, info: _SeqInfo,
+                    take: int, log: BlockLog) -> None:
+        start = req.prefill_pos
+        last = start + take >= info.target
+        plan.chunks.append(ChunkPiece(req, start, take, info.tokens, last))
+
+    def _register_upto(self, req: Request, info: _SeqInfo, upto: int,
+                       log: Optional[BlockLog]) -> None:
+        """Publish prompt blocks whose content is now installed under
+        their chain digests.  Called from the *compute* phase, after the
+        chunk scatter ran — a digest must never be matchable before its
+        rows exist, or a same-step admission would share garbage."""
+        bs = self.block_manager.block_size
+        table = self.block_tables[req.req_id]
+        while (info.next_register < len(info.digests)
+               and (info.next_register + 1) * bs <= upto):
+            b = info.next_register
+            bid = table.blocks[b]
+            if bid < self.block_manager.num_blocks:  # not released
+                parent = info.digests[b - 1] if b else ROOT_DIGEST
+                self.block_manager.register(
+                    bid, info.digests[b], parent,
+                    info.tokens[b * bs:(b + 1) * bs], log)
+            info.next_register += 1
+
+    def _admit_chunked(self, plan: StepPlan, req: Request, take_cap: int,
+                       log: BlockLog) -> Optional[int]:
+        """Admit the queue head onto the chunked path; returns the token
+        cost of its first piece (None = cannot admit this step)."""
+        bm = self.block_manager
+        bs = bm.block_size
+        toks = tuple(req.tokens_so_far)
+        target = len(toks)
+        # memoized per request: a head-of-line prompt that cannot admit
+        # for many steps (pool pressure) must not rehash every plan
+        digests: List[bytes] = []
+        if self.prefix_cache:
+            digests = self._digest_cache.get(req.req_id)
+            if digests is None:
+                digests = prompt_digests(toks, bs)
+                self._digest_cache[req.req_id] = digests
+
+        # full-block prefix hits — never the entire prompt: the final
+        # token must be computed to produce the first-sample logits
+        matched: List[bytes] = []
+        parked = 0
+        for b, d in enumerate(digests):
+            if (b + 1) * bs >= target:
+                break
+            bid = bm.lookup(d)
+            if bid is None:
+                break
+            matched.append(d)
+            if bm.ref_count(bid) == 0:
+                parked += 1
+        # copy-on-write at the divergence block: a cached block sharing
+        # the first q tokens after the matched prefix seeds the
+        # request's private block via a device row copy
+        cow_src, cow_q = None, 0
+        if self.prefix_cache:
+            parent = matched[-1] if matched else ROOT_DIGEST
+            rem = toks[len(matched) * bs: target - 1][:bs]
+            if rem:
+                for bid, cand in bm.children_of(parent):
+                    q = 0
+                    for a, c in zip(rem, cand):
+                        if a != c:
+                            break
+                        q += 1
+                    if q > cow_q:
+                        cow_src, cow_q = bid, q
+
+        cached_tokens = len(matched) * bs + cow_q
+        take = int(min(target - cached_tokens, take_cap))
+        if take < 1:
+            return None
+        if self.window:
+            # lazy allocation: cover only the first piece; continuations
+            # grow (and window-release) the table chunk by chunk, so a
+            # long prompt never pins O(prompt) blocks
+            cover = cached_tokens + take
+        else:
+            cover = min(target + 1, self.max_seq)
+        fresh = self._blocks_needed(cover) - len(matched)
+        if bm.num_allocatable - parked < fresh:
+            if self.window and bm.num_allocatable - parked > 0:
+                fresh = bm.num_allocatable - parked
+                take = min(take,
+                           (len(matched) + fresh) * bs - cached_tokens)
+                if take < 1:
+                    return None
+            else:
+                return None
+
+        self.waiting.popleft()
+        table = BlockTable(req.req_id)
+        for d in matched:
+            table.append_block(bm.acquire_cached(d, log), log)
+        for _ in range(fresh):
+            table.append_block(bm.allocate(log), log)
+        self.block_tables[req.req_id] = table
+        req.state = RequestState.RUNNING
+        req.batch_slot = self._free_slots.pop()
+        req.prefill_pos = cached_tokens
+        self.running.append(req)
+        if cow_src is not None:
+            plan.cow_copies.append(
+                (cow_src, table.blocks[len(matched)], cow_q))
+        self._digest_cache.pop(req.req_id, None)
+        info = _SeqInfo(tokens=toks, target=target, digests=digests,
+                        next_register=len(matched),
+                        cached_tokens=cached_tokens)
+        self._seq[req.req_id] = info
+        self._plan_piece(plan, req, info, take, log)
+        return take
+
+    def _admit_whole(self, req: Request, log: BlockLog) -> bool:
+        """Legacy whole-prompt admission (models with recurrent prefill
+        state; also the one-prefill-per-step baseline)."""
+        bm = self.block_manager
+        toks = tuple(req.tokens_so_far)
+        need = self._blocks_needed(min(len(toks) + 1, self.max_seq))
+        if bm.num_allocatable < need:
+            return False
+        self.waiting.popleft()
+        table = BlockTable(req.req_id)
+        for _ in range(need):
+            table.append_block(bm.allocate(log), log)
+        self.block_tables[req.req_id] = table
+        req.state = RequestState.RUNNING
+        req.batch_slot = self._free_slots.pop()
+        req.prefill_pos = 0
+        self.running.append(req)
+        self._seq[req.req_id] = _SeqInfo(tokens=toks, target=len(toks))
+        return True
+
+    # -- sliding-window block release ---------------------------------------------
+
+    def _release_out_of_window(self, req: Request, seq_len: int,
+                               log: Optional[BlockLog]) -> None:
+        """Free blocks entirely below the attention window's lower bound
+        (ROADMAP paged-KV follow-up (b)): the smallest attention this
+        step runs covers ``[seq_len - window, seq_len)``, so everything
+        strictly below that bound is never attended again.  The table
+        entry keeps its index but points at the trash row; pool
+        occupancy stays O(window) per sequence."""
+        if not self.window:
+            return
+        info = self._seq.get(req.req_id)
+        if info is None:
+            return
+        start = max(seq_len - self.window, 0)
+        bs = self.block_manager.block_size
+        table = self.block_tables[req.req_id]
+        # self-heal after a §3.3 rollback: undone releases restored real
+        # block ids below the watermark — walk it back so they free again
+        while (info.released_upto > 0
+               and table.blocks[info.released_upto - 1]
+               < self.block_manager.num_blocks):
+            info.released_upto -= 1
+        while (info.released_upto + 1) * bs <= start:
+            idx = info.released_upto
+            bid = table.blocks[idx]
+            if bid < self.block_manager.num_blocks:
+                table.set_block(idx, self._trash, log)
+                self.block_manager.free(bid, log)
+                self.stats["blocks_window_freed"] += 1
+            info.released_upto += 1
+
+    # -- stats (advisory; committed-step granularity) --------------------------------
+
+    def note_chunk_done(self, piece: ChunkPiece,
+                        log: Optional[BlockLog] = None) -> None:
+        """Compute-phase bookkeeping for one executed chunk piece: stats,
+        plus hash-publishing the prompt blocks the piece completed (their
+        rows are in the pool now)."""
+        self.stats["prefill_tokens_computed"] += piece.length
+        self.stats["prefill_chunks"] += 1
+        info = self._seq.get(piece.req.req_id)
+        if info is None:
+            return
+        if not info.counted:
+            self.stats["prefill_tokens_cached"] += info.cached_tokens
+            info.counted = True
+        if self.prefix_cache and info.digests:
+            self._register_upto(piece.req, info,
+                                piece.start + piece.length, log)
+
+    def note_prefill_done(self, n_tokens: int) -> None:
+        self.stats["prefill_tokens_computed"] += n_tokens
+
+    # -- completion -------------------------------------------------------------------
 
     def finish(self, req: Request, log: Optional[BlockLog]) -> None:
         req.state = RequestState.FINISHED
@@ -128,7 +498,10 @@ class LocalScheduler:
         table = self.block_tables.pop(req.req_id, None)
         if table is not None:
             for bid in reversed(table.blocks):
-                self.block_manager.free(bid, log)
+                if bid < self.block_manager.num_blocks:  # skip released
+                    self.block_manager.free(bid, log)
+        self._seq.pop(req.req_id, None)
+        self._digest_cache.pop(req.req_id, None)
         if req.batch_slot is not None:
             self._free_slots.append(req.batch_slot)
             req.batch_slot = None

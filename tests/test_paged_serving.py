@@ -213,6 +213,10 @@ class _DirectCtx:
                                             jnp.asarray(tokens), page,
                                             runtime)
 
+    def chunk_fn(self):
+        # chunked prefill shares the decode step (virtual token slots)
+        return self.decode_fn
+
     def prefill_fn(self, bucket):
         def fn(params, tokens, lengths, runtime):
             return self.model.prefill_paged(
@@ -228,25 +232,27 @@ class _DirectCtx:
         return fn
 
 
-def _executor(model, dp_rank=0):
+def _executor(model, dp_rank=0, pool_undo="rows"):
     from repro.serving.executor import DPExecutor
     from repro.serving.sampling import SamplingParams
     return DPExecutor(physical_id=dp_rank, dp_rank=dp_rank, model=model,
                       max_batch=2, max_seq=32, num_blocks=16, block_size=4,
-                      sampling=SamplingParams())
+                      sampling=SamplingParams(), pool_undo=pool_undo)
 
 
-def test_rollback_then_migrate_pool_and_table_consistency():
+@pytest.mark.parametrize("pool_undo", ["rows", "snapshot"])
+def test_rollback_then_migrate_pool_and_table_consistency(pool_undo):
     """§3.3 + §3.2 composed: a mid-step fault rolls the executor back to
-    the step boundary (block tables from the op log, pools from the
-    snapshot — bit-identical), and the rolled-back executor can then
+    the step boundary (block tables from the op log, pools by restoring
+    the captured write-set rows — or, legacy, the functional snapshot —
+    bit-identical either way), and the rolled-back executor can then
     stream a resident's KV blocks to a peer that continues the exact
     token sequence."""
     from repro.serving.request import Request, RequestState
     cfg = get_smoke_config("internlm2-20b")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    ex = _executor(model, 0)
+    ex = _executor(model, 0, pool_undo=pool_undo)
     ctx = _DirectCtx(model, params, ex)
 
     rng = np.random.default_rng(1)
@@ -278,9 +284,15 @@ def test_rollback_then_migrate_pool_and_table_consistency():
     assert len(ex.block_log) > 0
     undone = ex.rollback_inflight()
     assert undone > 0
-    # pool consistency: the cache IS the step-boundary value (no copy,
-    # no stale in-flight writes), tables/manager match it exactly
-    assert ex.cache is cache_at_boundary
+    # pool consistency: the cache equals the step-boundary value exactly
+    # (snapshot mode restores the identical object; row mode scatters
+    # the captured write-set rows back), tables/manager match it
+    if pool_undo == "snapshot":
+        assert ex.cache is cache_at_boundary
+    else:
+        for a, b in zip(jax.tree_util.tree_leaves(ex.cache),
+                        jax.tree_util.tree_leaves(cache_at_boundary)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert ex.block_manager.snapshot() == snap
     assert r1.output_tokens == tokens_before
     ex.scheduler.check_consistent()

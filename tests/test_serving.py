@@ -17,6 +17,12 @@ from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import LocalScheduler
 
 
+def _prefill_done(*reqs):
+    """Simulate the compute phase completing each request's prefill."""
+    for r in reqs:
+        r.prefill_pos = len(r.tokens_so_far)
+
+
 def test_scheduler_admission_and_block_accounting():
     bm = BlockManager(num_blocks=8, block_size=4)
     sched = LocalScheduler(max_batch=2, max_seq=32, block_manager=bm)
@@ -27,15 +33,36 @@ def test_scheduler_admission_and_block_accounting():
     for r in (r1, r2, r3):
         sched.add_request(r)
     log.begin_step()
+    # multi-admission: both slots fill in one step; r3 must wait
     plan = sched.plan_step(log)
-    assert plan.prefill is r1
+    assert plan.prefills == [r1, r2]
     assert sched.block_tables[r1.req_id].num_blocks() == 2
+    assert r3.state is RequestState.WAITING
+    _prefill_done(r1, r2)
     plan = sched.plan_step(log)
-    assert plan.prefill is r2 and r1 in plan.decode
-    # max_batch=2: r3 must wait
+    assert plan.prefill is None                      # max_batch=2: no slot
+    assert plan.decode == [r1, r2]
+
+
+def test_scheduler_budget_caps_admissions_per_step():
+    """The per-step token budget admits prompts until the budget runs
+    out; the first prefill may overflow it (long prompts must admit)."""
+    bm = BlockManager(num_blocks=16, block_size=4)
+    sched = LocalScheduler(max_batch=4, max_seq=64, block_manager=bm,
+                           token_budget=10)
+    log = BlockLog()
+    long = Request(list(range(12)), 4)     # 12 tokens > budget: admits alone
+    s1 = Request(list(range(4)), 4)
+    s2 = Request(list(range(4)), 4)
+    for r in (long, s1, s2):
+        sched.add_request(r)
+    log.begin_step()
     plan = sched.plan_step(log)
-    assert plan.prefill is None
-    assert len(plan.decode) == 2
+    assert plan.prefills == [long]         # overflow allowed only first
+    _prefill_done(long)
+    plan = sched.plan_step(log)
+    # 1 decode token + 4 + 4 prefill tokens <= 10
+    assert plan.decode == [long] and plan.prefills == [s1, s2]
 
 
 def test_scheduler_decode_allocates_on_boundary():
@@ -46,6 +73,7 @@ def test_scheduler_decode_allocates_on_boundary():
     sched.add_request(r)
     sched.plan_step(log)
     assert sched.block_tables[r.req_id].num_blocks() == 2  # +1 for next tok
+    _prefill_done(r)
     used = bm.num_allocated
     r.output_tokens.extend([5, 6, 7])                # positions 4,5,6
     sched.plan_step(log)                             # pos 7 fits block 2
@@ -200,24 +228,18 @@ def test_rollback_then_requeue_keeps_slots_and_tables_consistent():
     r1 = Request(list(range(4)), max_new_tokens=4)
     r2 = Request(list(range(4)), max_new_tokens=4)
     sched.add_request(r1)
-    sched.add_request(r2)
     log.begin_step()
     sched.plan_step(log)                    # admits r1
+    _prefill_done(r1)
     log.begin_step()                        # commit r1's step
     free_before = bm.num_free
     slots_before = sorted(sched._free_slots)
+    sched.add_request(r2)
     sched.plan_step(log)                    # admits r2 (uncommitted)
     # mid-step failure: undo r2's block ops, then requeue it
     log.undo_all(bm, sched.block_tables)
-    aborted = [r for r in sched.running
-               if sched.block_tables[r.req_id].num_blocks() == 0]
+    aborted = sched.rollback_aborted()
     assert aborted == [r2]
-    for r in aborted:
-        sched.running.remove(r)
-        del sched.block_tables[r.req_id]
-        sched._free_slots.append(r.batch_slot)
-        r.batch_slot = None
-        sched.requeue_front(r)
     assert bm.num_free == free_before
     assert sorted(sched._free_slots) == slots_before
     assert sched.waiting[0] is r2           # requeued at the front
