@@ -11,8 +11,6 @@ Measures, for the decode graph of the serving model:
 """
 from __future__ import annotations
 
-import dataclasses
-import os
 import tempfile
 import time
 from typing import Dict, List

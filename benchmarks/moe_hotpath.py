@@ -1,4 +1,5 @@
-"""MoE steady-state hot-path benchmark: dense-scatter vs fused pipeline.
+"""MoE steady-state hot-path benchmark: dense-scatter vs fused pipeline,
+plus the decode-step megakernel vs the composed kernel chain.
 
 ReviveMoE's recovery races against the per-step MoE latency (§3.4 keeps
 the compiled MoE graph alive across failures precisely so the steady
@@ -6,15 +7,24 @@ state stays fast), so this benchmark tracks the one number every future
 kernel PR has to beat: time per MoE layer application for decode- and
 prefill-shaped batches.
 
-Two implementations of the identical routing semantics are timed:
+Two sections:
 
-  * ``dense``  — ``moe.dispatch_compute_combine``: argsort + scatter into
-    an (E, cap, D) capacity buffer, batched einsum FFN, gather + unsort.
-  * ``fused``  — ``ops.moe_dispatch_ffn_combine``: one sort pass to slot
-    tables, then gather -> grouped SwiGLU -> scatter-combine in a single
-    kernel (Pallas on TPU; the gather-first jnp fallback on CPU).
+  * **MoE layer** — ``dense`` (``moe.dispatch_compute_combine``: argsort
+    + scatter into an (E, cap, D) capacity buffer, batched einsum FFN,
+    gather + unsort) vs ``fused`` (``ops.moe_dispatch_ffn_combine``: one
+    sort pass to slot tables, then gather -> grouped SwiGLU ->
+    scatter-combine in a single kernel).
+  * **Decode step** — the ``composed`` chain one attention+MoE block
+    runs per decode step (paged attention -> output projection ->
+    residual -> norm -> router top-k -> replica select -> fused MoE)
+    vs ``ops.decode_megastep``, which fuses the whole chain into one
+    kernel launch.  On CPU both sides are jnp (one XLA jit each), so
+    the numbers measure op-boundary overhead only; on TPU the megastep
+    replaces a multi-kernel chain with one ``pallas_call``.
 
-Results append to ``BENCH_moe_hotpath.json`` at the repo root —
+Every row carries ``metric_us`` — the number the CI trajectory gate
+(``benchmarks/trajectory.py check``) compares against the best prior
+record.  Results append to ``BENCH_moe_hotpath.json`` at the repo root —
 machine-readable so later PRs diff against the trajectory.
 """
 from __future__ import annotations
@@ -36,6 +46,14 @@ SWEEP = [
     ("prefill_2k", "prefill", 2048, 16, 2, 256, 512),
 ]
 
+# (name, B, max_blk, block_size, H, Hkv, Dh, E, top_k, D, F) — one
+# attention+MoE block at decode shapes (CPU-sized; see SWEEP note)
+DECODE_STEP_SWEEP = [
+    ("megastep_b8", 8, 8, 16, 8, 2, 64, 8, 2, 256, 512),
+    ("megastep_b32", 32, 8, 16, 8, 2, 64, 16, 2, 256, 512),
+    ("megastep_b128", 128, 16, 16, 8, 2, 64, 32, 4, 256, 512),
+]
+
 
 def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     import jax
@@ -49,7 +67,11 @@ def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return best
 
 
-def run(quick: bool = False, use_pallas: bool = None) -> List[Dict]:
+def run(quick: bool = False, use_pallas: bool = None,
+        iters: int = 5) -> List[Dict]:
+    """``iters``: timing repetitions per shape (best-of).  The CI gate
+    passes a higher count — on small shared machines the best-of
+    converges to the true minimum despite scheduling noise."""
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops
@@ -79,16 +101,102 @@ def run(quick: bool = False, use_pallas: bool = None) -> List[Dict]:
 
         t_dense = _time_fn(
             lambda: dense(x, w, phys, alive, g, u, d, cap=cap,
-                          expert_offset=off, e_local=E))
+                          expert_offset=off, e_local=E), iters=iters)
         t_fused = _time_fn(
             lambda: ops.moe_dispatch_ffn_combine(
                 x, g, u, d, w, phys, alive, off, cap=cap, e_local=E,
-                use_pallas=use_pallas))
+                use_pallas=use_pallas), iters=iters)
         rows.append({
             "name": name, "kind": kind, "T": T, "E": E, "top_k": k,
             "D": D, "F": F, "cap": cap,
             "dense_us": t_dense * 1e6, "fused_us": t_fused * 1e6,
+            "metric_us": t_fused * 1e6,
             "speedup": t_dense / max(t_fused, 1e-12),
+            "backend": jax.default_backend(), "use_pallas": use_pallas,
+        })
+    rows.extend(run_decode_step(quick=quick, use_pallas=use_pallas,
+                                iters=iters))
+    return rows
+
+
+def run_decode_step(quick: bool = False, use_pallas: bool = None,
+                    iters: int = 5) -> List[Dict]:
+    """Decode-step section: composed attention->router->MoE chain vs the
+    fused ``ops.decode_megastep`` (both jit'd whole, so on CPU the
+    comparison isolates op-boundary overhead; on TPU it is one
+    ``pallas_call`` vs the kernel chain)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.models.moe import capacity
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() not in ("cpu",)
+    sweep = DECODE_STEP_SWEEP[:1] if quick else DECODE_STEP_SWEEP
+    rows = []
+    for name, B, max_blk, bs, H, Hkv, Dh, E, k, D, F in sweep:
+        nb = max_blk * B + 1
+        ks = jax.random.split(jax.random.fold_in(
+            jax.random.PRNGKey(11), B * E), 11)
+        q = jax.random.normal(ks[0], (B, H, Dh)) * 0.3
+        k_pool = jax.random.normal(ks[1], (nb, bs, Hkv, Dh)) * 0.3
+        v_pool = jax.random.normal(ks[2], (nb, bs, Hkv, Dh)) * 0.3
+        bt = jax.random.randint(ks[3], (B, max_blk), 0, nb)
+        sl = jax.random.randint(ks[4], (B,), 1, max_blk * bs + 1)
+        st = jnp.zeros((B,), jnp.int32)
+        x = jax.random.normal(ks[5], (B, D)) * 0.2
+        w_post = jax.random.normal(ks[6], (H * Dh, D)) * 0.1
+        ln2 = jnp.ones((D,))
+        router_w = jax.random.normal(ks[7], (D, E)) * 0.2
+        l2p = jnp.stack([jnp.arange(E, dtype=jnp.int32),
+                         jnp.zeros((E,), jnp.int32)], axis=1)
+        rcnt = jnp.ones((E,), jnp.int32)
+        mask = jnp.ones((E,), bool)
+        g = jax.random.normal(ks[8], (E, D, F)) * 0.05
+        u = jax.random.normal(ks[9], (E, D, F)) * 0.05
+        d = jax.random.normal(ks[10], (E, F, D)) * 0.05
+        cap = capacity(B * k, E, 1.25)
+        off = jnp.int32(0)
+
+        @functools.partial(jax.jit, static_argnames=())
+        def composed(q, k_pool, v_pool, bt, sl, st, x, w_post, ln2,
+                     router_w, rcnt, l2p, mask, g, u, d, off):
+            o = ops.paged_attention(q, k_pool, v_pool, bt, sl, st,
+                                    use_pallas=use_pallas)
+            x2 = x + o.reshape(B, -1).astype(x.dtype) @ w_post
+            xf = x2.astype(jnp.float32)
+            var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+            h2 = (xf * jax.lax.rsqrt(var + 1e-5)).astype(x2.dtype) * ln2
+            logits = (h2 @ router_w).astype(jnp.float32)
+            logits = jnp.where(mask[None, :], logits, -jnp.inf)
+            gates = jax.nn.softmax(logits, axis=-1)
+            w, sel = jax.lax.top_k(gates, k)
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+            count = jnp.maximum(rcnt[sel], 1)
+            rep = (jnp.arange(B)[:, None] + jnp.arange(k)[None, :]) % count
+            phys = jnp.take_along_axis(l2p[sel], rep[..., None],
+                                       axis=-1)[..., 0]
+            alive = rcnt[sel] > 0
+            y = ops.moe_dispatch_ffn_combine(
+                h2, g, u, d, w, phys.astype(jnp.int32), alive, off,
+                cap=cap, e_local=E, use_pallas=use_pallas)
+            return x2 + y
+
+        args = (q, k_pool, v_pool, bt, sl, st, x, w_post, ln2, router_w,
+                rcnt, l2p, mask, g, u, d, off)
+        t_comp = _time_fn(lambda: composed(*args), iters=iters)
+        t_mega = _time_fn(lambda: ops.decode_megastep(
+            q, k_pool, v_pool, bt, sl, st, x, w_post, ln2, router_w,
+            l2p, rcnt, mask, g, u, d, off, top_k=k, cap=cap, e_local=E,
+            use_pallas=use_pallas)[0], iters=iters)
+        rows.append({
+            "name": name, "kind": "decode_step", "T": B, "E": E,
+            "top_k": k, "D": D, "F": F, "cap": cap,
+            "composed_us": t_comp * 1e6, "mega_us": t_mega * 1e6,
+            "metric_us": t_mega * 1e6,
+            "speedup": t_comp / max(t_mega, 1e-12),
             "backend": jax.default_backend(), "use_pallas": use_pallas,
         })
     return rows
@@ -96,14 +204,30 @@ def run(quick: bool = False, use_pallas: bool = None) -> List[Dict]:
 
 def print_table(rows: List[Dict]) -> None:
     impl = "pallas" if rows and rows[0]["use_pallas"] else "jnp fallback"
-    print(f"\n# MoE hot path: dense-scatter vs fused ({impl}, "
-          f"backend={rows[0]['backend'] if rows else '?'})")
-    print(f"{'shape':12s} {'kind':8s} {'T':>6s} {'E':>4s} {'k':>3s} "
-          f"{'cap':>5s} {'dense us':>10s} {'fused us':>10s} {'speedup':>8s}")
-    for r in rows:
-        print(f"{r['name']:12s} {r['kind']:8s} {r['T']:6d} {r['E']:4d} "
-              f"{r['top_k']:3d} {r['cap']:5d} {r['dense_us']:10.0f} "
-              f"{r['fused_us']:10.0f} {r['speedup']:7.2f}x")
+    backend = rows[0]["backend"] if rows else "?"
+    layer = [r for r in rows if "fused_us" in r]
+    step = [r for r in rows if "mega_us" in r]
+    if layer:
+        print(f"\n# MoE hot path: dense-scatter vs fused ({impl}, "
+              f"backend={backend})")
+        print(f"{'shape':12s} {'kind':8s} {'T':>6s} {'E':>4s} {'k':>3s} "
+              f"{'cap':>5s} {'dense us':>10s} {'fused us':>10s} "
+              f"{'speedup':>8s}")
+        for r in layer:
+            print(f"{r['name']:12s} {r['kind']:8s} {r['T']:6d} {r['E']:4d} "
+                  f"{r['top_k']:3d} {r['cap']:5d} {r['dense_us']:10.0f} "
+                  f"{r['fused_us']:10.0f} {r['speedup']:7.2f}x")
+    if step:
+        print(f"\n# Decode step: composed chain vs megakernel ({impl}, "
+              f"backend={backend})")
+        print(f"{'shape':12s} {'kind':11s} {'B':>6s} {'E':>4s} {'k':>3s} "
+              f"{'cap':>5s} {'composed us':>12s} {'mega us':>10s} "
+              f"{'speedup':>8s}")
+        for r in step:
+            print(f"{r['name']:12s} {r['kind']:11s} {r['T']:6d} "
+                  f"{r['E']:4d} {r['top_k']:3d} {r['cap']:5d} "
+                  f"{r['composed_us']:12.0f} {r['mega_us']:10.0f} "
+                  f"{r['speedup']:7.2f}x")
 
 
 def save_json(rows: List[Dict], path: str = BENCH_PATH, *,
@@ -113,11 +237,12 @@ def save_json(rows: List[Dict], path: str = BENCH_PATH, *,
     ``quick`` is recorded so reduced sweeps are never mistaken for the
     full-sweep records future PRs must beat.
     """
-    from benchmarks.trajectory import append_record
+    from benchmarks.trajectory import append_record, machine_id
     append_record(path, {
         "benchmark": "moe_hotpath",
         "unix_time": time.time(),
         "quick": quick,
+        "machine": machine_id(),
         "rows": rows,
     })
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import shutil
 import tempfile
 from typing import Dict, List, Optional
 

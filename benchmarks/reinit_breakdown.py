@@ -8,7 +8,6 @@ groups/other.
 """
 from __future__ import annotations
 
-import os
 import tempfile
 from typing import Dict, List
 

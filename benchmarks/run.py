@@ -47,10 +47,16 @@ def main(argv=None) -> int:
         moe_hotpath.print_table(rows)
         moe_hotpath.save_json(rows, quick=args.quick)
         for r in rows:
-            csv_rows.append((f"moe_hotpath_{r['name']}_fused",
-                             f"{r['fused_us']:.0f}",
-                             f"dense_us={r['dense_us']:.0f},"
-                             f"speedup={r['speedup']:.2f}x"))
+            if "mega_us" in r:
+                csv_rows.append((f"moe_hotpath_{r['name']}_mega",
+                                 f"{r['mega_us']:.0f}",
+                                 f"composed_us={r['composed_us']:.0f},"
+                                 f"speedup={r['speedup']:.2f}x"))
+            else:
+                csv_rows.append((f"moe_hotpath_{r['name']}_fused",
+                                 f"{r['fused_us']:.0f}",
+                                 f"dense_us={r['dense_us']:.0f},"
+                                 f"speedup={r['speedup']:.2f}x"))
 
     if want("reinit"):
         from benchmarks import reinit_breakdown

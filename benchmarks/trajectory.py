@@ -1,29 +1,241 @@
-"""Shared helper for BENCH-style JSON perf-trajectory files.
+"""BENCH-style JSON perf-trajectory files: shared writer + the CI gate.
 
 A trajectory file is a JSON list of run records; every benchmark that
 appends to one goes through :func:`append_record` so the on-disk shape
 stays uniform across writers.
+
+The ``check`` subcommand is the enforcement mechanism behind the
+ROADMAP's "future perf PRs must beat the latest record" sentence: it
+runs a fresh ``--quick`` sweep of the named benchmark (best-of-12
+timing), compares each row's ``metric_us`` against the prior-record
+**bar** for the same shape — the median of comparable prior runs'
+bests, matched on ``quick`` flag / backend / pallas mode (numbers from
+a TPU run never gate a CPU run) and recorded **machine id** (wall-clock
+microseconds are not comparable across machine classes, so a record
+taken on a developer box never spuriously fails a slower CI runner) —
+re-measures once if it looks like a regression (transient scheduling
+stalls don't repeat; real regressions do), appends the fresh run to
+the trajectory, and exits nonzero on regression beyond ``--tolerance``.
+An empty (or never-matching) trajectory seeds a baseline and exits
+zero, so the first run on a new machine is green instead of failing:
+
+    python -m benchmarks.trajectory check --bench moe_hotpath \
+        --tolerance 0.1
+
+Wired into the ``perf-smoke`` CI job.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict
+from typing import Dict, List, Optional
+
+_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def machine_id() -> str:
+    """Coarse machine *class* of the timing host, stored per run record
+    so the gate only compares wall-clock numbers taken on comparable
+    hardware.  Deliberately hostname-free: ephemeral CI runners of one
+    pool (same OS/arch/core count) must match each other across runs —
+    the perf-smoke job persists its own trajectory via actions/cache,
+    so CI gates against CI history, never against a developer box."""
+    import platform
+    return (f"{platform.system()}/{platform.machine()}"
+            f"/{os.cpu_count()}cpu")
 
 
 def append_record(path: str, record: Dict) -> None:
-    trajectory = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                trajectory = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            # a previously interrupted write left a truncated file; keep
-            # it for forensics and start a fresh trajectory
-            os.replace(path, path + ".corrupt")
-            trajectory = []
+    trajectory = load(path)
     trajectory.append(record)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(trajectory, f, indent=1)
     os.replace(tmp, path)    # atomic: no torn trajectory on interrupt
+
+
+def load(path: str) -> List[Dict]:
+    """The trajectory as a list of run records ([] when absent)."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError):
+        # a previously interrupted write left a truncated file; keep
+        # it for forensics and start a fresh trajectory
+        os.replace(path, path + ".corrupt")
+        return []
+
+
+def row_metric(row: Dict) -> Optional[float]:
+    """The row's gate metric: explicit ``metric_us``, else the fused-
+    pipeline time (rows written before the gate existed)."""
+    if "metric_us" in row:
+        return row["metric_us"]
+    if "fused_us" in row:
+        return row["fused_us"]
+    return None
+
+
+def bar_metrics(records: List[Dict], *, benchmark: str, quick: bool,
+                backend: Optional[str] = None,
+                use_pallas: Optional[bool] = None,
+                machine: Optional[str] = None) -> Dict[str, float]:
+    """Per-shape gate bar over comparable prior records: the **median**
+    of each run's (already best-of) metric.
+
+    Records are comparable when they ran the same benchmark with the
+    same ``quick`` flag on the same recorded machine id (records
+    predating the machine field are skipped — unattributable timings
+    must not gate); rows additionally match on backend and pallas mode
+    so cross-backend numbers never gate each other.  The median — not
+    the all-time minimum — is deliberate: with run-to-run scheduling
+    noise, gating against the minimum ratchets the bar down to the
+    luckiest measurement ever seen and unchanged code eventually fails;
+    the median of run bests is what the machine reproducibly does,
+    which is the record a perf PR must beat.
+    """
+    import statistics
+    vals: Dict[str, List[float]] = {}
+    for rec in records:
+        if rec.get("benchmark") != benchmark:
+            continue
+        if bool(rec.get("quick")) != quick:
+            continue
+        if machine is not None and rec.get("machine") != machine:
+            continue
+        for row in rec.get("rows", []):
+            if backend is not None and row.get("backend") != backend:
+                continue
+            if (use_pallas is not None
+                    and bool(row.get("use_pallas")) != use_pallas):
+                continue
+            m = row_metric(row)
+            if m is None:
+                continue
+            vals.setdefault(row["name"], []).append(m)
+    return {name: statistics.median(v) for name, v in vals.items()}
+
+
+# gate-able benchmarks: name -> (module path, trajectory file)
+GATED_BENCHES = {
+    "moe_hotpath": ("benchmarks.moe_hotpath",
+                    os.path.join(_ROOT, "BENCH_moe_hotpath.json")),
+}
+
+
+def check(benchmark: str = "moe_hotpath", tolerance: float = 0.1,
+          path: Optional[str] = None, quick: bool = True) -> int:
+    """Run the benchmark fresh, gate it against the trajectory, append.
+
+    Returns the process exit code: 0 = no regression (or baseline
+    seeded), 1 = at least one shape regressed beyond ``tolerance``.
+    """
+    import importlib
+    if benchmark not in GATED_BENCHES:
+        raise SystemExit(f"no trajectory gate for {benchmark!r}; "
+                         f"gate-able: {sorted(GATED_BENCHES)}")
+    modname, default_path = GATED_BENCHES[benchmark]
+    mod = importlib.import_module(modname)
+    path = path or default_path
+
+    prior = load(path)
+    # gate runs time harder than plain benchmark runs: best-of-12 so a
+    # scheduling stall on a small shared runner cannot fake a regression
+    rows = mod.run(quick=quick, iters=12)
+    mod.print_table(rows)
+    backend = rows[0]["backend"] if rows else None
+    use_pallas = bool(rows[0]["use_pallas"]) if rows else None
+    mach = machine_id()
+    bar = bar_metrics(prior, benchmark=benchmark, quick=quick,
+                      backend=backend, use_pallas=use_pallas,
+                      machine=mach)
+
+    for _retry in range(2):
+        if not (bar and _gate_regressions(rows, bar, tolerance,
+                                          quiet=True)):
+            break
+        # apparent regression: re-measure before failing — transient
+        # scheduling stalls do not repeat across independent sweeps, a
+        # real regression does; each row keeps its best sweep
+        print("\n[trajectory] apparent regression: re-measuring to "
+              "rule out a transient stall...")
+        rerun = {r["name"]: r for r in mod.run(quick=quick, iters=12)}
+        for row in rows:
+            again = rerun.get(row["name"])
+            m0, m1 = row_metric(row), row_metric(again or {})
+            if m1 is not None and (m0 is None or m1 < m0):
+                row.update(again)
+
+    # the fresh run always extends the trajectory — a regressing run
+    # is recorded too (the bar is a median over runs, so one bad or one
+    # lucky record moves it only marginally)
+    mod.save_json(rows, path, quick=quick)
+
+    if not bar:
+        print(f"\n[trajectory] no comparable prior record in {path} "
+              f"(quick={quick}, backend={backend}, machine={mach}): "
+              f"baseline seeded, gate green")
+        return 0
+
+    print(f"\n[trajectory] gate vs prior-record bar on {mach} "
+          f"(median of run bests, tolerance {tolerance:.0%}):")
+    regressions = _gate_regressions(rows, bar, tolerance)
+    if regressions:
+        print(f"\n[trajectory] FAIL: {len(regressions)} shape(s) "
+              f"slower than the trajectory bar beyond "
+              f"{tolerance:.0%}")
+        return 1
+    print("\n[trajectory] PASS: no regression vs the trajectory bar")
+    return 0
+
+
+def _gate_regressions(rows: List[Dict], bar: Dict[str, float],
+                      tolerance: float, quiet: bool = False) -> List:
+    regressions = []
+    for row in rows:
+        m = row_metric(row)
+        name = row["name"]
+        if m is None or name not in bar:
+            if not quiet:
+                print(f"  {name:16s} {'(new shape, seeds baseline)':>32s}")
+            continue
+        ratio = m / max(bar[name], 1e-12)
+        status = "ok" if ratio <= 1.0 + tolerance else "REGRESSION"
+        if not quiet:
+            print(f"  {name:16s} {m:10.0f} us vs bar "
+                  f"{bar[name]:10.0f} us ({ratio:5.2f}x)  {status}")
+        if ratio > 1.0 + tolerance:
+            regressions.append((name, m, bar[name], ratio))
+    return regressions
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="perf-trajectory tools (BENCH_*.json)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser(
+        "check", help="run a fresh --quick sweep and gate it against "
+        "the best prior trajectory record")
+    chk.add_argument("--bench", default="moe_hotpath",
+                     choices=sorted(GATED_BENCHES))
+    chk.add_argument("--tolerance", type=float, default=0.1,
+                     help="allowed fractional slowdown vs the best "
+                     "prior record (default 0.1 = 10%%)")
+    chk.add_argument("--path", default=None,
+                     help="trajectory file (default: the benchmark's "
+                     "BENCH_*.json)")
+    chk.add_argument("--full", action="store_true",
+                     help="gate the full sweep instead of --quick")
+    args = ap.parse_args(argv)
+    if args.cmd == "check":
+        return check(args.bench, tolerance=args.tolerance,
+                     path=args.path, quick=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -21,7 +21,7 @@ import dataclasses
 
 from repro.configs import get_smoke_config
 from repro.core.fault_codes import ErrorType, Severity
-from repro.fleet import InstanceState, PoissonTraffic, build_fleet
+from repro.fleet import PoissonTraffic, build_fleet
 from repro.serving.engine import EngineConfig
 
 

@@ -41,7 +41,7 @@ def main():
     path = "/tmp/repro_train_moe/weights.npz"
     dt = save_checkpoint(path, params)
     print(f"checkpoint saved in {dt:.2f}s -> {path}")
-    restored = restore_like(path, jax.eval_shape(lambda: params))
+    restore_like(path, jax.eval_shape(lambda: params))
     print("checkpoint restores OK")
 
 

@@ -7,8 +7,8 @@ exactly one place in ``repro.models``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -106,6 +106,15 @@ class ModelConfig:
     # compute through the fused Pallas dispatch->FFN->combine kernel
     # instead of the dense-scatter capacity buffer.
     moe_impl: str = "gather_psum"
+    # Paged decode/chunk step execution: 'composed' runs the
+    # attention -> router -> MoE op chain (each op jnp oracle on CPU,
+    # Pallas kernel on TPU); 'megakernel' fuses one attention+MoE
+    # block's paged attention, output projection, residuals, norm,
+    # router top-k, replica selection and expert FFN+combine into a
+    # single decode-shaped kernel launch (``ops.decode_megastep``).
+    # Blocks the megakernel cannot express (dense FFN, recurrent
+    # mixers, distributed MoE) fall back to the composed chain.
+    decode_impl: str = "composed"
     remat: bool = False
     scan_layers: bool = True
     # decode-cache update strategy: False = cache flows as scan xs/ys
@@ -115,6 +124,7 @@ class ModelConfig:
 
     MOE_IMPLS = ("gather_psum", "a2a", "fused", "gather_psum_fused",
                  "a2a_fused")
+    DECODE_IMPLS = ("composed", "megakernel")
 
     @property
     def moe_fused(self) -> bool:
@@ -142,6 +152,7 @@ class ModelConfig:
     def validate(self) -> None:
         assert self.family in ("dense", "moe", "hybrid", "ssm", "audio", "vlm")
         assert self.moe_impl in self.MOE_IMPLS, self.moe_impl
+        assert self.decode_impl in self.DECODE_IMPLS, self.decode_impl
         assert self.attention_type in ("gqa", "mla", "none")
         if self.attention_type == "mla":
             assert self.mla is not None

@@ -18,7 +18,7 @@ computation graph must be (re-)compiled (§3.6).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 

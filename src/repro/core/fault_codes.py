@@ -14,7 +14,6 @@ import enum
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 
 class Severity(enum.IntEnum):

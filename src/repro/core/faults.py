@@ -9,8 +9,8 @@ analogue) that the detection layer polls.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List
 
 from repro.core.fault_codes import ErrorType, FaultEvent, Severity
 

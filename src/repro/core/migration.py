@@ -29,7 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, List, Optional, Sequence
 
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 
 
 @dataclass

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.fault_codes import Action, FaultEvent
 from repro.core.migration import plan_migration, prepare_for_migration

@@ -15,7 +15,7 @@ axis — correctness first, the §Perf pass tunes the exceptions.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import NamedSharding

@@ -1,0 +1,340 @@
+"""Decode megakernel: paged attention + router + MoE in one launch.
+
+The steady-state decode step is the hot path every ReviveMoE recovery
+event returns to.  The composed step runs, per attention+MoE block, a
+chain of kernels with HBM round-trips between them:
+
+  paged_attention -> (B, H*Dh) out -> wo matmul -> residual -> rms_norm
+  -> router matmul -> top_k -> replica select -> sort pre-pass ->
+  fused MoE dispatch/FFN/combine -> residual
+
+This kernel fuses the whole chain into **one** ``pallas_call`` per
+block.  A single flat sequential grid runs three phases (TPU grids with
+``arbitrary`` semantics execute in order, so cross-phase scratch carries
+are race-free):
+
+  * **attention** (steps ``[0, B*max_blk)``): the paged-attention online
+    softmax of ``kernels.paged_attention`` — page ``j`` of row ``b`` is
+    DMA'd via the scalar-prefetched block table; on each row's last page
+    the output is projected through ``w_post`` and added to the residual
+    stream, writing ``x2`` into the output tile (which stays VMEM-
+    resident across all phases — the (B, H*Dh) attention output and the
+    (B, D) residual never round-trip HBM).
+  * **route** (step ``B*max_blk``): RMS norm, router matmul, iterative
+    top-k (k argmax passes — decode-shaped, k <= 8), replica selection
+    from the MoERuntime arrays, and the per-expert slot tables built by
+    a sequential scan (decode batches are small enough that the sort
+    pre-pass of ``moe_fused`` degenerates to this O(B*k) scan).  This
+    subsumes kernel target (b): router top-k + replica select live in
+    the megakernel's grouping pre-pass.
+  * **MoE** (steps after): the grouped-SwiGLU expert pipeline of
+    ``kernels.moe_fused`` — gather rows from the resident ``h2`` tile at
+    the first F-block, accumulate the FFN, scatter-combine ``wgt * acc``
+    into the resident output tile on the last.
+
+Everything mutable by recovery — block tables, seq lens, window starts,
+``expert_offset`` and the MoERuntime ``l2p``/``replica_count``/
+``expert_mask`` — rides in as scalar-prefetch or tensor *data*, so
+``fail_rank``/``mask_experts``/migration/chunked prefill never retrigger
+compilation.
+
+Current limitation (documented, matching ``moe_fused``): ``x``/``y``/
+``h2``/``w_post``/``router_w`` use whole-array VMEM block specs, so the
+kernel is decode/chunk-shaped (B = decode batch or chunk width); the
+capacity axis is a single block (decode caps are small).  Shared
+experts are a dense FFN over ``h2`` and stay outside (they are
+compute-bound GEMMs, not paged-memory-bound; the ``h2`` output exists
+so callers apply them without recomputing the norm).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _megastep_kernel(bt_ref, sl_ref, st_ref, off_ref,
+                     q_ref, k_ref, v_ref, x_ref, wpost_ref, ln2_ref,
+                     router_ref, l2p_ref, rcnt_ref, mask_ref,
+                     gate_ref, up_ref, down_ref,
+                     y_ref, h2_ref,
+                     acc_ref, m_ref, l_ref, xs_ref, accm_ref,
+                     sel_ref, wsel_ref, tok_ref, wgt_ref, cnt_ref, *,
+                     bs: int, n_attn: int, nf: int, cap: int, top_k: int,
+                     e_local: int, e_log: int, scale: float, eps: float):
+    t = pl.program_id(0)
+    attn_steps = pl.num_programs(0) - 1 - e_local * nf  # == B * n_attn
+
+    # ---- phase A: paged-attention online softmax + post-projection ----
+    @pl.when(t < attn_steps)
+    def _attention():
+        b = t // n_attn
+        j = t % n_attn
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        q = q_ref[0].astype(jnp.float32)                  # (H, Da)
+        k = k_ref[0].astype(jnp.float32)                  # (bs, Hkv, Da)
+        v = v_ref[0].astype(jnp.float32)
+        H, Da = q.shape
+        Hkv = k.shape[1]
+        G = H // Hkv
+
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = (pos < sl_ref[b]) & (pos >= st_ref[b])    # (1, bs)
+
+        qg = q.reshape(Hkv, G, Da)
+        s_rows = []
+        for h in range(Hkv):
+            s_rows.append(jnp.dot(qg[h], k[:, h, :].T,
+                                  preferred_element_type=jnp.float32))
+        s = jnp.stack(s_rows).reshape(H, bs) * scale      # (H, bs)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv_rows = []
+        pg = p.reshape(Hkv, G, bs)
+        for h in range(Hkv):
+            pv_rows.append(jnp.dot(pg[h], v[:, h, :],
+                                   preferred_element_type=jnp.float32))
+        pv = jnp.stack(pv_rows).reshape(H, Da)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+        @pl.when(j == n_attn - 1)
+        def _project():
+            o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)   # (H, Da)
+            o_flat = o.reshape(1, H * Da).astype(x_ref.dtype)
+            proj = jnp.dot(o_flat, wpost_ref[...],
+                           preferred_element_type=jnp.float32)  # (1, D)
+            y_ref[b, :] = x_ref[b, :] + proj[0].astype(y_ref.dtype)
+
+    # ---- phase R: norm + router top-k + replica select + grouping ----
+    @pl.when(t == attn_steps)
+    def _route():
+        x2 = y_ref[...]                                   # (B, D) == x+attn
+        B = x2.shape[0]
+        xf = x2.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        h2 = (xf * jax.lax.rsqrt(var + eps)).astype(x2.dtype) * ln2_ref[...]
+        h2_ref[...] = h2
+        logits = jnp.dot(h2, router_ref[...],
+                         preferred_element_type=jnp.float32)  # (B, E_log)
+        logits = jnp.where(mask_ref[...] != 0, logits, NEG_INF)
+        mx = jnp.max(logits, axis=-1, keepdims=True)
+        g = jnp.exp(logits - mx)
+        gates = g / jnp.sum(g, axis=-1, keepdims=True)
+        iota_e = jax.lax.broadcasted_iota(jnp.int32, (B, e_log), 1)
+        remaining = gates
+        wsum = jnp.zeros((B, 1), jnp.float32)
+        for kk in range(top_k):     # k argmax passes; ties -> lowest id,
+            mv = jnp.max(remaining, axis=-1, keepdims=True)  # as lax.top_k
+            sk = jnp.min(jnp.where(remaining >= mv, iota_e, e_log),
+                         axis=-1, keepdims=True)
+            sel_ref[:, kk] = sk[:, 0]
+            wsel_ref[:, kk] = mv[:, 0]
+            wsum = wsum + mv
+            remaining = jnp.where(iota_e == sk, -1.0, remaining)
+        wsel_ref[...] = wsel_ref[...] / jnp.maximum(wsum, 1e-9)
+
+        # per-expert slot tables: the sequential scan is the decode-shaped
+        # sort pre-pass (token order == stable-sort order, so drop
+        # semantics match moe_group_tokens exactly)
+        tok_ref[...] = jnp.zeros_like(tok_ref)
+        wgt_ref[...] = jnp.zeros_like(wgt_ref)
+
+        def _zero(i, _):
+            cnt_ref[i] = 0
+            return 0
+        jax.lax.fori_loop(0, e_local, _zero, 0)
+
+        off = off_ref[0]
+
+        def _group(n, _):
+            b = n // top_k
+            kk = n % top_k
+            s = sel_ref[b, kk]
+            w = wsel_ref[b, kk]
+            rc = rcnt_ref[0, s]
+            rep = jax.lax.rem(b + kk, jnp.maximum(rc, 1))
+            ph = l2p_ref[s, rep]
+            e = ph - off
+            ok = (e >= 0) & (e < e_local) & (rc > 0)
+            ec = jnp.clip(e, 0, e_local - 1)
+            c = cnt_ref[ec]
+            ok = ok & (c < cap)
+
+            @pl.when(ok)
+            def _():
+                tok_ref[ec, c] = b
+                wgt_ref[ec, c] = w
+                cnt_ref[ec] = c + 1
+
+            return 0
+        jax.lax.fori_loop(0, sel_ref.shape[0] * top_k, _group, 0)
+
+    # ---- phase M: grouped SwiGLU FFN + weighted scatter-combine ----
+    @pl.when(t > attn_steps)
+    def _moe():
+        u = t - attn_steps - 1
+        e = u // nf
+        f = u % nf
+
+        @pl.when(f == 0)
+        def _gather():
+            accm_ref[...] = jnp.zeros_like(accm_ref)
+
+            def body(i, _):
+                tkn = tok_ref[e, i]
+                live = wgt_ref[e, i] != 0.0
+                row = h2_ref[tkn, :]
+                xs_ref[i, :] = jnp.where(live, row, 0.0).astype(
+                    xs_ref.dtype)
+                return 0
+            jax.lax.fori_loop(0, cap, body, 0)
+
+        xg = xs_ref[...]                                  # (cap, D)
+        gw = gate_ref[0]                                  # (D, Fb)
+        uw = up_ref[0]
+        dw = down_ref[0]                                  # (Fb, D)
+        h = jax.nn.silu(jnp.dot(xg, gw, preferred_element_type=jnp.float32))
+        h = h * jnp.dot(xg, uw, preferred_element_type=jnp.float32)
+        accm_ref[...] += jnp.dot(h.astype(xg.dtype), dw,
+                                 preferred_element_type=jnp.float32)
+
+        @pl.when(f == nf - 1)
+        def _combine():
+            def body(i, _):
+                w = wgt_ref[e, i]
+
+                @pl.when(w != 0.0)
+                def _():
+                    tkn = tok_ref[e, i]
+                    y_ref[tkn, :] += (w * accm_ref[i, :]).astype(
+                        y_ref.dtype)
+
+                return 0
+            jax.lax.fori_loop(0, cap, body, 0)
+
+
+def decode_megastep_pallas(q, k_pool, v_pool, block_table, seq_lens,
+                           start_lens, x, w_post, ln2_w, router_w, l2p,
+                           replica_count, expert_mask, gate_w, up_w,
+                           down_w, expert_offset, *, top_k: int, cap: int,
+                           e_local: int, eps: float = 1e-5,
+                           block_f: int = 256, interpret: bool = False):
+    """One fused attention+MoE decode block step (see module docstring).
+
+    Shapes as :func:`repro.kernels.ref.decode_megastep_ref`; returns
+    ``(y (B, D), h2 (B, D))``.
+    """
+    B, H, Da = q.shape
+    nb, bs, Hkv, _ = k_pool.shape
+    n_attn = block_table.shape[1]
+    D = x.shape[1]
+    E = gate_w.shape[0]
+    assert E == e_local, (E, e_local)
+    e_log = router_w.shape[1]
+    F = gate_w.shape[-1]
+    scale = 1.0 / (Da ** 0.5)
+
+    Fb = min(block_f, F)
+    Fp = ((F + Fb - 1) // Fb) * Fb
+    if Fp != F:
+        gate_w = jnp.pad(gate_w, ((0, 0), (0, 0), (0, Fp - F)))
+        up_w = jnp.pad(up_w, ((0, 0), (0, 0), (0, Fp - F)))
+        down_w = jnp.pad(down_w, ((0, 0), (0, Fp - F), (0, 0)))
+    nf = Fp // Fb
+
+    attn_steps = B * n_attn
+    grid = (attn_steps + 1 + E * nf,)
+
+    def _ab(t):
+        ta = jnp.minimum(t, attn_steps - 1)
+        return ta // n_attn, ta % n_attn
+
+    def _ef(t):
+        u = jnp.clip(t - attn_steps - 1, 0, E * nf - 1)
+        return u // nf, u % nf
+
+    kernel = functools.partial(
+        _megastep_kernel, bs=bs, n_attn=n_attn, nf=nf, cap=cap,
+        top_k=top_k, e_local=E, e_log=e_log, scale=scale, eps=eps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, Da),
+                         lambda t, bt, sl, st, off: (_ab(t)[0], 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, Da),
+                         lambda t, bt, sl, st, off:
+                         (bt[_ab(t)[0], _ab(t)[1]], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, Da),
+                         lambda t, bt, sl, st, off:
+                         (bt[_ab(t)[0], _ab(t)[1]], 0, 0, 0)),
+            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((H * Da, D), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((1, D), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((D, e_log), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec(l2p.shape, lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((1, e_log), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((1, e_log), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((1, D, Fb),
+                         lambda t, bt, sl, st, off: (*_ef(t)[:1], 0,
+                                                     _ef(t)[1])),
+            pl.BlockSpec((1, D, Fb),
+                         lambda t, bt, sl, st, off: (*_ef(t)[:1], 0,
+                                                     _ef(t)[1])),
+            pl.BlockSpec((1, Fb, D),
+                         lambda t, bt, sl, st, off: (*_ef(t)[:1],
+                                                     _ef(t)[1], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, Da), jnp.float32),    # attention accumulator
+            pltpu.VMEM((H, 1), jnp.float32),     # running max
+            pltpu.VMEM((H, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((cap, D), x.dtype),       # gathered expert rows
+            pltpu.VMEM((cap, D), jnp.float32),   # FFN accumulator
+            pltpu.VMEM((B, top_k), jnp.int32),   # selected logical ids
+            pltpu.VMEM((B, top_k), jnp.float32),  # renormalized weights
+            pltpu.VMEM((E, cap), jnp.int32),     # slot -> token row
+            pltpu.VMEM((E, cap), jnp.float32),   # slot combine weight
+            pltpu.SMEM((E,), jnp.int32),         # per-expert fill count
+        ],
+    )
+    y, h2 = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, D), x.dtype),
+                   jax.ShapeDtypeStruct((B, D), x.dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      start_lens.astype(jnp.int32),
+      jnp.asarray(expert_offset, jnp.int32).reshape(1),
+      q, k_pool, v_pool, x, w_post, ln2_w.reshape(1, D), router_w,
+      l2p.astype(jnp.int32), replica_count.astype(jnp.int32).reshape(
+          1, e_log), expert_mask.astype(jnp.int32).reshape(1, e_log),
+      gate_w, up_w, down_w)
+    return y, h2

@@ -15,7 +15,6 @@ Tiling strategy (TPU-native, MXU-aligned):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

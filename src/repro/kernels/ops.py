@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.decode_megakernel import decode_megastep_pallas
 from repro.kernels.expert_ffn import expert_ffn_pallas
 from repro.kernels.moe_fused import moe_fused_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
@@ -71,6 +72,38 @@ def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
                                        seq_lens, start_lens)
     return paged_attention_pallas(q, k_pool, v_pool, block_table, seq_lens,
                                   start_lens, interpret=_on_cpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("top_k", "cap", "e_local", "eps",
+                                    "use_pallas"))
+def decode_megastep(q, k_pool, v_pool, block_table, seq_lens, start_lens,
+                    x, w_post, ln2_w, router_w, l2p, replica_count,
+                    expert_mask, gate_w, up_w, down_w, expert_offset, *,
+                    top_k: int, cap: int, e_local: int, eps: float = 1e-5,
+                    use_pallas: bool = True):
+    """One fused attention+MoE decode block step (ISSUE 5 tentpole).
+
+    Paged attention -> output projection -> residual -> norm -> router
+    top-k -> replica select -> grouped expert FFN -> combine -> residual
+    in one kernel launch (Pallas on TPU; jnp oracle on CPU).  The block
+    table / seq_lens / start_lens paging arrays, ``expert_offset`` and
+    the MoERuntime arrays are all *traced data*, so continuous batching,
+    revive, migration and expert masking never retrigger compilation.
+    Returns ``(y, h2)`` — shared experts (if any) are applied by the
+    caller over ``h2``.
+    """
+    if not use_pallas:
+        return ref.decode_megastep_ref(
+            q, k_pool, v_pool, block_table, seq_lens, start_lens, x,
+            w_post, ln2_w, router_w, l2p, replica_count, expert_mask,
+            gate_w, up_w, down_w, expert_offset, top_k=top_k, cap=cap,
+            e_local=e_local, eps=eps)
+    return decode_megastep_pallas(
+        q, k_pool, v_pool, block_table, seq_lens, start_lens, x, w_post,
+        ln2_w, router_w, l2p, replica_count, expert_mask, gate_w, up_w,
+        down_w, expert_offset, top_k=top_k, cap=cap, e_local=e_local,
+        eps=eps, interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

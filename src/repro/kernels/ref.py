@@ -99,6 +99,52 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
     return o.reshape(B, H, Dh).astype(q.dtype)
 
 
+def decode_megastep_ref(q, k_pool, v_pool, block_table, seq_lens,
+                        start_lens, x, w_post, ln2_w, router_w, l2p,
+                        replica_count, expert_mask, gate_w, up_w, down_w,
+                        expert_offset, *, top_k: int, cap: int,
+                        e_local: int, eps: float = 1e-5):
+    """Fused decode-step oracle: paged attention -> output projection ->
+    residual -> RMS norm -> router top-k -> replica select -> fused MoE
+    dispatch/FFN/combine -> residual, for one attention+MoE block.
+
+    q: (B, H, Da) roped/pre-scaled query (for MLA, Da = R + dr and q is
+    the latent query the composed path feeds ``paged_attention``);
+    pools/block_table/seq_lens/start_lens as in
+    :func:`paged_attention_ref` (the incoming token's K/V is already
+    written); x: (B, D) the block input (residual stream); w_post:
+    (H*Da, D) post-attention projection (GQA: wo; MLA: the absorbed
+    wuv·wo with zero rows for the rope columns); l2p (E_log,
+    MAX_REPLICAS) / replica_count (E_log,) / expert_mask (E_log,) are
+    the MoERuntime arrays — pure data, so recovery mutations never
+    recompile.  Returns ``(y, h2)``: the block output (shared experts
+    excluded — callers apply them over ``h2``, the normed post-attention
+    activations, exactly as the composed path does).
+    """
+    B = q.shape[0]
+    o = paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
+                            start_lens)
+    x2 = x + o.reshape(B, -1).astype(x.dtype) @ w_post
+    xf = x2.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    h2 = (xf * jax.lax.rsqrt(var + eps)).astype(x2.dtype) * ln2_w
+    # routing — same math as moe.route (§3.4 failure mask included)
+    logits = (h2 @ router_w).astype(jnp.float32)
+    logits = jnp.where(expert_mask[None, :], logits, -jnp.inf)
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, sel = jax.lax.top_k(gates, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # replica selection — same math as moe.select_replicas
+    count = jnp.maximum(replica_count[sel], 1)
+    replica = (jnp.arange(B)[:, None] + jnp.arange(top_k)[None, :]) % count
+    phys = jnp.take_along_axis(l2p[sel], replica[..., None], axis=-1)[..., 0]
+    alive = replica_count[sel] > 0
+    y_moe = moe_fused_ref(h2, gate_w, up_w, down_w, w,
+                          phys.astype(jnp.int32), alive, cap=cap,
+                          expert_offset=expert_offset, e_local=e_local)
+    return x2 + y_moe, h2
+
+
 def ssm_scan_ref(u, dt, A, B_ssm, C_ssm, h0=None):
     """Selective-scan oracle.
 

@@ -25,6 +25,7 @@ def _run_fleet(args, cfg) -> int:
     ec = EngineConfig(mode=args.mode, num_dp=args.num_dp,
                       num_moe=args.num_moe, max_batch=4, max_seq=128,
                       block_size=16, num_blocks=256,
+                      decode_impl=args.decode_impl,
                       workdir=args.workdir)
     traffic = PoissonTraffic(args.rate, cfg.vocab_size, prompt_len=12,
                              max_new_tokens=args.max_new, seed=0,
@@ -96,6 +97,10 @@ def main(argv=None):
     ap.add_argument("--replenish-spares", action="store_true",
                     help="rebuild consumed standbys in the background "
                     "(fleet mode)")
+    ap.add_argument("--decode-impl", default=None,
+                    choices=[None, "composed", "megakernel"],
+                    help="decode/chunk step implementation (megakernel "
+                    "= fused attention+MoE step; default: model config)")
     ap.add_argument("--no-kv-stream", action="store_true",
                     help="force token-replay re-prefill on migration "
                     "(disable KV-block streaming)")
@@ -110,7 +115,8 @@ def main(argv=None):
         return _run_fleet(args, cfg)
     ec = EngineConfig(mode=args.mode, num_dp=args.num_dp,
                       num_moe=args.num_moe, max_batch=4, max_seq=128,
-                      block_size=16, num_blocks=256, workdir=args.workdir)
+                      block_size=16, num_blocks=256, workdir=args.workdir,
+                      decode_impl=args.decode_impl)
     print(f"building engine: {args.arch} ({args.mode}, "
           f"{args.num_dp} DP + {args.num_moe if cfg.moe else 0} MoE ranks)")
     eng = InferenceEngine(cfg, ec)

@@ -37,7 +37,7 @@ def main(argv=None):
 
     from repro.configs import get_smoke_config, get_config
     from repro.models.model import Model
-    from repro.training.data import DataConfig, lm_batches, make_batch
+    from repro.training.data import DataConfig, make_batch
     from repro.training.train_loop import train
     import numpy as np
 

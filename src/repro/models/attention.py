@@ -14,7 +14,7 @@ training-eval path.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -239,10 +239,39 @@ def gqa_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _window_starts(cfg: ModelConfig, seq_lens):
+def window_starts(cfg: ModelConfig, seq_lens):
+    """Sliding-window lower bound per sequence (None = full attention)."""
     if not cfg.sliding_window:
         return None
     return jnp.maximum(seq_lens - cfg.sliding_window, 0)
+
+
+def gqa_decode_qkv(p, cfg: ModelConfig, x, page, *, use_rope=True):
+    """Shared q/k/v projection (+rope at ``seq_lens - 1``) for the paged
+    decode paths — the composed chain and the decode megakernel both
+    start from exactly these tensors."""
+    B, D = x.shape
+    Dh = cfg.resolved_head_dim()
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    pos = page["seq_lens"] - 1
+    q = (x @ p["wq"]).reshape(B, H, Dh)
+    k = (x @ p["wk"]).reshape(B, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, Hkv, Dh)
+    if use_rope:
+        sin, cos = rope_sincos(pos, Dh, cfg.rope_theta)
+        q = apply_rope(q, sin[:, None, :], cos[:, None, :])
+        k = apply_rope(k, sin[:, None, :], cos[:, None, :])
+    return q, k, v
+
+
+def gqa_write_token(pools, page, k, v):
+    """Scatter one incoming token's K/V into its (block, offset) rows
+    (idle batch slots hit the trash block)."""
+    k_pool = pools["k"].at[page["write_bid"], page["write_off"]].set(
+        k.astype(pools["k"].dtype))
+    v_pool = pools["v"].at[page["write_bid"], page["write_off"]].set(
+        v.astype(pools["v"].dtype))
+    return {"k": k_pool, "v": v_pool}
 
 
 def gqa_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
@@ -258,27 +287,15 @@ def gqa_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
     from repro.kernels import ops
     B, D = x.shape
     Dh = cfg.resolved_head_dim()
-    H, Hkv = cfg.num_heads, cfg.num_kv_heads
-    pos = page["seq_lens"] - 1
-
-    q = (x @ p["wq"]).reshape(B, H, Dh)
-    k = (x @ p["wk"]).reshape(B, Hkv, Dh)
-    v = (x @ p["wv"]).reshape(B, Hkv, Dh)
-    if use_rope:
-        sin, cos = rope_sincos(pos, Dh, cfg.rope_theta)
-        q = apply_rope(q, sin[:, None, :], cos[:, None, :])
-        k = apply_rope(k, sin[:, None, :], cos[:, None, :])
-
-    k_pool = pools["k"].at[page["write_bid"], page["write_off"]].set(
-        k.astype(pools["k"].dtype))
-    v_pool = pools["v"].at[page["write_bid"], page["write_off"]].set(
-        v.astype(pools["v"].dtype))
-    out = ops.paged_attention(q, k_pool, v_pool, page["tables"],
-                              page["seq_lens"],
-                              _window_starts(cfg, page["seq_lens"]),
+    H = cfg.num_heads
+    q, k, v = gqa_decode_qkv(p, cfg, x, page, use_rope=use_rope)
+    new_pools = gqa_write_token(pools, page, k, v)
+    out = ops.paged_attention(q, new_pools["k"], new_pools["v"],
+                              page["tables"], page["seq_lens"],
+                              window_starts(cfg, page["seq_lens"]),
                               use_pallas=use_pallas)
     y = out.reshape(B, H * Dh).astype(x.dtype) @ p["wo"]
-    return y, {"k": k_pool, "v": v_pool}
+    return y, new_pools
 
 
 def mla_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
@@ -295,6 +312,46 @@ def mla_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
     return {"ckr": jnp.zeros(shape, dtype)}
 
 
+def mla_decode_q_token(p, cfg: ModelConfig, x, page):
+    """Absorbed latent query + fused pool token row for one MLA decode
+    step.  The query is pre-scaled by ``sqrt(R+dr)/sqrt(dn+dr)`` so the
+    paged-attention kernel's ``1/sqrt(R+dr)`` yields the MLA scale."""
+    m = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    R = m.kv_lora_rank
+    pos = page["seq_lens"] - 1
+    q_nope, q_rope, c_kv, k_rope, sin, cos = _mla_qkr(p, cfg, x, pos)
+    q_rope = apply_rope(q_rope, sin[:, None, :], cos[:, None, :])  # (B,H,dr)
+    k_rope = apply_rope(k_rope, sin, cos)                          # (B,dr)
+    q_lat = jnp.einsum("bhd,hdr->bhr", q_nope, p["wuk"])           # (B,H,R)
+    token = jnp.concatenate([c_kv, k_rope], axis=-1)               # (B,R+dr)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1) * (
+        math.sqrt(R + dr) / math.sqrt(dn + dr))
+    return q_eff, token
+
+
+def mla_write_token(pools, page, token):
+    """Scatter one incoming token's fused latent row into its block."""
+    pool = pools["ckr"].at[page["write_bid"], page["write_off"], 0].set(
+        token.astype(pools["ckr"].dtype))
+    return {"ckr": pool}
+
+
+def mla_post_matrix(p, cfg: ModelConfig):
+    """Absorbed post-attention projection (H*(R+dr), D): ``wuv`` folded
+    into ``wo``, zero rows for the rope columns — so the megakernel's
+    single ``out @ w_post`` matmul equals the composed slice-then-two-
+    einsum readout.  At deployment scale cache this per weight version;
+    here it is rebuilt inside the jitted step (smoke-size folding)."""
+    m = cfg.mla
+    H = cfg.num_heads
+    dr, dv = m.qk_rope_head_dim, m.v_head_dim
+    D = p["wo"].shape[1]
+    wov = jnp.einsum("hrv,hvd->hrd", p["wuv"], p["wo"].reshape(H, dv, D))
+    return jnp.concatenate(
+        [wov, jnp.zeros((H, dr, D), wov.dtype)], axis=1).reshape(-1, D)
+
+
 def mla_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
                      use_pallas: bool = False):
     """Absorbed-matmul MLA decode over the fused latent pool.
@@ -307,29 +364,19 @@ def mla_decode_paged(p, cfg: ModelConfig, x, pools, page, *,
     B, D = x.shape
     m = cfg.mla
     H = cfg.num_heads
-    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    dv = m.v_head_dim
     R = m.kv_lora_rank
-    pos = page["seq_lens"] - 1
 
-    q_nope, q_rope, c_kv, k_rope, sin, cos = _mla_qkr(p, cfg, x, pos)
-    q_rope = apply_rope(q_rope, sin[:, None, :], cos[:, None, :])  # (B,H,dr)
-    k_rope = apply_rope(k_rope, sin, cos)                          # (B,dr)
-    q_lat = jnp.einsum("bhd,hdr->bhr", q_nope, p["wuk"])           # (B,H,R)
-
-    pool = pools["ckr"]
-    token = jnp.concatenate([c_kv, k_rope], axis=-1)               # (B,R+dr)
-    pool = pool.at[page["write_bid"], page["write_off"], 0].set(
-        token.astype(pool.dtype))
-    # the kernel scales by 1/sqrt(R+dr); MLA wants 1/sqrt(dn+dr)
-    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1) * (
-        math.sqrt(R + dr) / math.sqrt(dn + dr))
+    q_eff, token = mla_decode_q_token(p, cfg, x, page)
+    new_pools = mla_write_token(pools, page, token)
+    pool = new_pools["ckr"]
     out = ops.paged_attention(q_eff.astype(pool.dtype), pool, pool,
                               page["tables"], page["seq_lens"],
-                              _window_starts(cfg, page["seq_lens"]),
+                              window_starts(cfg, page["seq_lens"]),
                               use_pallas=use_pallas)
     o_lat = out[..., :R]                                           # (B,H,R)
     o = jnp.einsum("bhr,hrv->bhv", o_lat.astype(x.dtype), p["wuv"])
-    return o.reshape(B, H * dv) @ p["wo"], {"ckr": pool}
+    return o.reshape(B, H * dv) @ p["wo"], new_pools
 
 
 def gqa_cross_decode(p, cfg: ModelConfig, x, ck, cv, kv_valid):

@@ -28,7 +28,6 @@ def mamba_dims(cfg: ModelConfig):
 
 
 def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
-    m = cfg.mamba
     D = cfg.d_model
     d_inner, N, d_conv, dt_rank = mamba_dims(cfg)
     ks = split_keys(key, 5)

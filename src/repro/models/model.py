@@ -22,7 +22,7 @@ Two decode-cache representations:
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -604,6 +604,10 @@ class Model:
                             mixer, ffn_kind):
         from repro.kernels.ops import _on_cpu
         cfg = self.cfg
+        if (cfg.decode_impl == "megakernel" and mixer == "attn"
+                and ffn_kind == "moe" and self.moe_dist is None):
+            return self._block_decode_megastep(p, x, csl, page, runtime,
+                                               cap)
         aux = 0.0
         use_pallas = not _on_cpu()
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -625,6 +629,46 @@ class Model:
             y, aux = self._moe(p["moe"], h2, runtime, cap)
             x = x + y
         return x, entry, aux
+
+    def _block_decode_megastep(self, p, x, csl, page, runtime, cap):
+        """One attention+MoE block through ``ops.decode_megastep``: the
+        whole attention -> residual -> norm -> route -> expert FFN ->
+        combine chain is a single kernel launch (jnp oracle on CPU).
+        QKV projection + rope + the pool token write stay outside — they
+        are one fused GEMM/scatter shared with the composed path, and
+        keeping the write in XLA keeps the §3.3 row-level undo manifest
+        valid unchanged.  All paging arrays and MoERuntime tables ride
+        in as data: recovery mutations never recompile (§3.4)."""
+        from repro.kernels import ops
+        from repro.kernels.ops import _on_cpu
+        cfg = self.cfg
+        use_pallas = not _on_cpu()
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.attention_type == "mla":
+            q, token = A.mla_decode_q_token(p["mixer"], cfg, h, page)
+            entry = A.mla_write_token(csl, page, token)
+            k_pool = v_pool = entry["ckr"]
+            q = q.astype(k_pool.dtype)
+            w_post = A.mla_post_matrix(p["mixer"], cfg)
+        else:
+            q, k, v = A.gqa_decode_qkv(p["mixer"], cfg, h, page)
+            entry = A.gqa_write_token(csl, page, k, v)
+            k_pool, v_pool = entry["k"], entry["v"]
+            w_post = p["mixer"]["wo"]
+        starts = A.window_starts(cfg, page["seq_lens"])
+        if starts is None:
+            starts = jnp.zeros_like(page["seq_lens"])
+        moe_p = p["moe"]
+        y, h2 = ops.decode_megastep(
+            q, k_pool, v_pool, page["tables"], page["seq_lens"], starts,
+            x, w_post, p["ln2"], moe_p["router"],
+            runtime.logical_to_physical, runtime.replica_count,
+            runtime.expert_mask, moe_p["gate"], moe_p["up"],
+            moe_p["down"], jnp.int32(0), top_k=cfg.moe.top_k, cap=cap,
+            e_local=MoE.physical_experts(cfg.moe), eps=cfg.norm_eps,
+            use_pallas=use_pallas)
+        y = y + MoE.shared_expert_apply(moe_p, cfg, h2)
+        return y, entry, 0.0
 
     def _period_decode_paged(self, p, x, csl, page, runtime, cap):
         cfg = self.cfg

@@ -20,7 +20,6 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.comm_domain import CommDomain
@@ -136,6 +135,11 @@ class EngineConfig:
     # through the fused Pallas dispatch->FFN->combine pipeline); None
     # keeps the model config's choice
     moe_impl: Optional[str] = None
+    # override ModelConfig.decode_impl: 'megakernel' fuses each
+    # attention+MoE block's decode/chunk step into one kernel launch
+    # (ops.decode_megastep); None keeps the model config's choice, whose
+    # default — 'composed' — is the kernel-chain oracle path
+    decode_impl: Optional[str] = None
     # -- admission pipeline ---------------------------------------------------
     # 'chunked': token-budget continuous batching — many prefills per
     #   step, each chunked so long prompts interleave with decodes
@@ -181,6 +185,12 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.moe_impl must be one of "
                 f"{ModelConfig.MOE_IMPLS} or None, got {self.moe_impl!r}")
+        if (self.decode_impl is not None
+                and self.decode_impl not in ModelConfig.DECODE_IMPLS):
+            raise ValueError(
+                f"EngineConfig.decode_impl must be one of "
+                f"{ModelConfig.DECODE_IMPLS} or None, "
+                f"got {self.decode_impl!r}")
         if self.admission not in ("chunked", "serial"):
             raise ValueError(
                 f"EngineConfig.admission must be 'chunked' or 'serial', "
@@ -228,10 +238,12 @@ class InstanceHealth:
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = None):
+        import dataclasses
         self.ecfg = engine_cfg or EngineConfig()
         if self.ecfg.moe_impl is not None and cfg.moe is not None:
-            import dataclasses
             cfg = dataclasses.replace(cfg, moe_impl=self.ecfg.moe_impl)
+        if self.ecfg.decode_impl is not None:
+            cfg = dataclasses.replace(cfg, decode_impl=self.ecfg.decode_impl)
         self.cfg = cfg
         if cfg.moe is None:
             # dense model: no expert ranks; disaggregated degenerates
@@ -482,15 +494,49 @@ class InferenceEngine:
         self.all_requests.append(req)
         return req
 
+    # a prefix-affine executor may be at most this many requests busier
+    # than the least-loaded one (mirrors FleetRouter.AFFINITY_SLACK —
+    # cache hits must not create hotspots within the instance either)
+    ASSIGN_AFFINITY_SLACK = 4
+
     def _assign(self, req: Request) -> None:
+        """Pick an attention rank for a request: least-loaded, biased
+        toward in-instance prefix affinity (ROADMAP paged-KV (i)) — the
+        DP executor whose BlockManager already holds the prompt's
+        leading full-block digests serves the shared prefix from its
+        cache instead of recomputing it on a cold rank, unless it is
+        more than ``ASSIGN_AFFINITY_SLACK`` requests busier than the
+        least-loaded executor."""
         healthy = [ex for ex in self.dp_executors
                    if ex.alive and ex.cache is not None]
         if not healthy:
             raise RuntimeError(
                 "no healthy attention ranks left on this instance")
-        ex = min(healthy, key=lambda e: e.scheduler.num_requests)
+        least = min(healthy, key=lambda e: e.scheduler.num_requests)
+        ex = least
+        digests = None
+        if (len(healthy) > 1 and self._chunking and self.ecfg.prefix_cache
+                and len(req.tokens_so_far) > self.ecfg.block_size):
+            from repro.core.block_log import prompt_digests
+            digests = prompt_digests(tuple(req.tokens_so_far),
+                                     self.ecfg.block_size)
+            best, best_hits = None, 0
+            for cand in healthy:
+                hits = cand.prefix_hit_blocks(digests,
+                                              len(req.tokens_so_far))
+                if hits > best_hits:
+                    best, best_hits = cand, hits
+            if (best is not None
+                    and best.scheduler.num_requests
+                    <= least.scheduler.num_requests
+                    + self.ASSIGN_AFFINITY_SLACK):
+                ex = best
         req.dp_rank = ex.dp_rank
         ex.scheduler.add_request(req)
+        if digests is not None:
+            # hand the chain digests to the scheduler's per-request memo
+            # so admission doesn't rehash the prompt _assign just hashed
+            ex.scheduler.memo_digests(req.req_id, digests)
 
     def admit(self, req: Request, kv=None) -> Request:
         """Admit a request created elsewhere (cross-instance migration).

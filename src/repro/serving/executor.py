@@ -22,7 +22,6 @@ the op log, pools by scattering the captured write-set rows back.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -161,6 +160,22 @@ class DPExecutor:
         if collect_kv:
             return [(r, payloads.get(r.req_id)) for r in reqs]
         return reqs
+
+    def prefix_hit_blocks(self, digests, prompt_len: int) -> int:
+        """How many *leading* full prompt blocks this executor's
+        BlockManager can serve from its shared-prefix cache — the
+        engine's in-instance affinity signal (``_assign``).  Mirrors the
+        admission matcher: the prompt's final token is never cacheable
+        (its logits must be computed), so the last block is skipped."""
+        bs = self.block_size
+        hits = 0
+        for b, d in enumerate(digests):
+            if (b + 1) * bs >= prompt_len:
+                break
+            if self.block_manager.lookup(d) is None:
+                break
+            hits += 1
+        return hits
 
     # -- two-phase step -----------------------------------------------------------
 

@@ -18,7 +18,7 @@ recovery never retrigger compilation.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -110,6 +110,13 @@ class LocalScheduler:
         self._digest_cache.pop(req.req_id, None)
         self.waiting.append(req)
 
+    def memo_digests(self, req_id: int, digests: List[bytes]) -> None:
+        """Seed the per-request chain-digest memo (a caller — e.g. the
+        engine's prefix-affine ``_assign`` — already hashed the prompt;
+        admission must not rehash it).  Only valid after
+        ``add_request``, which clears any stale entry first."""
+        self._digest_cache[req_id] = digests
+
     def drain(self) -> List[Request]:
         """Remove and return every request (used for migration §3.2)."""
         reqs = list(self.waiting) + list(self.running)
@@ -136,10 +143,13 @@ class LocalScheduler:
     def rollback_aborted(self) -> List[Request]:
         """After ``BlockLog.undo_all``: admissions from the aborted step
         (their allocs were all undone, leaving an empty block table)
-        return to the waiting queue front."""
+        return to the waiting queue front.  Requeued in *reverse*
+        admission order — each ``requeue_front`` prepends, so walking
+        the aborted list backwards restores the original FIFO order
+        when one step admitted several requests."""
         aborted = [r for r in self.running
                    if self.block_tables[r.req_id].num_blocks() == 0]
-        for r in aborted:
+        for r in reversed(aborted):
             self.running.remove(r)
             del self.block_tables[r.req_id]
             if r.batch_slot is not None:

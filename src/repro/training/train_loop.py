@@ -2,13 +2,13 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.training.optimizer import (AdamWState, OptimizerConfig,
+from repro.training.optimizer import (OptimizerConfig,
                                       adamw_update, init_adamw)
 
 

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core.block_log import BlockLog, BlockManager, prompt_digests
+from repro.core.block_log import BlockLog, BlockManager
 from repro.models.model import Model
 from repro.serving.engine import EngineConfig, InferenceEngine
 from repro.serving.request import Request
@@ -445,3 +445,25 @@ def test_prefix_affinity_routing_unit():
             r._route([a, b], list(hot))
     assert hot[: FleetRouter.AFFINITY_LENS[0]] in r._affinity
     assert len(r._affinity) <= FleetRouter._AFFINITY_MAP_MAX
+
+
+def test_rollback_aborted_preserves_fifo_order():
+    """Two admissions in one aborted step must requeue in arrival
+    order: requeue_front prepends, so rollback walks the aborted list
+    in reverse (a forward walk would leave [B, A] and invert FIFO)."""
+    bm = BlockManager(num_blocks=32, block_size=4)
+    sched = LocalScheduler(max_batch=4, max_seq=64, block_manager=bm,
+                           token_budget=64, chunk_tokens=32)
+    log = BlockLog()
+    ra = Request(list(range(10)), 4)
+    rb = Request(list(range(10, 22)), 4)
+    sched.add_request(ra)
+    sched.add_request(rb)
+    log.begin_step()
+    plan = sched.plan_step(log)
+    assert [p.req for p in plan.chunks] == [ra, rb]  # both admitted
+    log.undo_all(bm, sched.block_tables)
+    aborted = sched.rollback_aborted()
+    assert {r.req_id for r in aborted} == {ra.req_id, rb.req_id}
+    assert list(sched.waiting) == [ra, rb]           # FIFO preserved
+    sched.check_consistent()

@@ -26,7 +26,7 @@ def test_role_switch_takes_failed_logical_rank():
     failed = d.device(6)           # moe logical rank 2
     failed_logical = failed.logical_rank
     d.fail(6)
-    rec = d.rebuild(role_switch_physical=1)   # dp rank 1 switches
+    d.rebuild(role_switch_physical=1)         # dp rank 1 switches
     switched = d.device(1)
     assert switched.role == "moe"
     assert switched.logical_rank == failed_logical

@@ -317,7 +317,7 @@ def test_import_kv_blocks_refuses_without_capacity():
     """The stream install is all-or-nothing: no slot or not enough free
     blocks -> False, and the target's accounting is untouched (callers
     fall back to token replay)."""
-    from repro.serving.request import Request, RequestState
+    from repro.serving.request import Request
     cfg = get_smoke_config("internlm2-20b")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -1,6 +1,5 @@
 """Serving substrate unit tests: scheduler, sampling, cache ops,
 checkpoint, migration planning."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, \
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, \
     get_config, get_smoke_config
 from repro.models.model import Model
 
