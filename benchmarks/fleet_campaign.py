@@ -1,0 +1,296 @@
+"""Chaos campaign benchmark: arbiter vs forced policies under a seeded
+fleet-scale fault schedule, scored by SLO-burn.
+
+Four fleets (same instances, same warm spare, same diurnal arrival
+trace, same fault schedule) differ only in recovery policy: the
+measurement-fed arbiter free to choose, vs forced revive-only /
+restart-only / spare-only (an infeasible forced policy degrades to
+restart deterministically).  The campaign layers correlated rack loss,
+flapping links, cascading stragglers, a spot-preemption wave with
+advance notice, unplanned host losses and a rolling upgrade onto the
+trace; each fleet is scored by SLO-burn — the integral of windowed p99
+TTFT/TPOT excess over target.
+
+Everything runs on the pinned :class:`VirtualCostProfile` clock, so the
+whole campaign — including the emitted failure-forensics JSON with its
+per-event counterfactual cost table — is byte-reproducible from the
+seed; CI's nightly determinism gate diffs two runs.
+
+A second section exercises a small multi-model fleet (two configs
+behind one router): a spot preemption takes the minority model's only
+instance, forcing evict-and-rebalance of an over-provisioned peer.
+
+Appends to ``BENCH_fleet_campaign.json``; forensics JSONs land next to
+it as ``FORENSICS_campaign_<policy>.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Dict, Optional
+
+from benchmarks.fleet_harness import fleet_cfg, fleet_ecfg
+from repro.fleet import (CampaignRunner, CampaignSchedule, DiurnalTraffic,
+                         MixedTraffic, PoissonTraffic, VirtualCostProfile,
+                         build_fleet, build_multi_model_fleet,
+                         fleet_topology)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(_ROOT, "BENCH_fleet_campaign.json")
+
+CAMPAIGN_SEED = 5
+TRAFFIC_SEED = 11
+# tight targets relative to the pinned 20ms virtual step: a healthy
+# fleet serves well under them, while a 2.5s restart stall (or a
+# permanently lost instance queueing its arrivals) burns visibly
+TTFT_TARGET_S = 0.15
+TPOT_TARGET_S = 0.08
+SLO_WINDOW_S = 5.0
+PROFILE = VirtualCostProfile()
+
+POLICIES = (None, "revive", "restart", "spare")   # None = arbiter free
+
+
+def _policy_name(policy: Optional[str]) -> str:
+    return policy or "arbiter"
+
+
+def _traffic(quick: bool):
+    # base 2.0/s with these limits spans the whole campaign horizon
+    # (~38s of 45s quick, ~118s of 120s full) so the fault processes
+    # land on live traffic rather than an idle fleet
+    return DiurnalTraffic(
+        2.0, fleet_cfg().vocab_size, amplitude=0.5, period_s=40.0,
+        prompt_len=8, max_new_tokens=8, seed=TRAFFIC_SEED,
+        limit=80 if quick else 240)
+
+
+def _schedule(topo: Dict, quick: bool):
+    horizon = 45.0 if quick else 120.0
+    sched = (CampaignSchedule(CAMPAIGN_SEED, horizon)
+             .device_faults(topo, rate_per_s=0.04)
+             .rack_loss(topo, rate_per_s=0.008)
+             .flapping_link(topo, start_s=6.0, n_flaps=2,
+                            down_s=2.0, up_s=4.0)
+             .cascading_stragglers(topo, start_s=14.0, spacing_s=4.0,
+                                   n=2, slowdown=4.0, duration_s=3.0)
+             .spot_wave(topo, at_s=horizon * 0.55, n_instances=1,
+                        notice_s=4.0)
+             .rolling_upgrade(topo, start_s=horizon * 0.75,
+                              spacing_s=6.0))
+    if not quick:
+        sched.instance_loss(topo, rate_per_s=0.01)
+    return sched.build()
+
+
+def run_campaign(workdir: str, policy: Optional[str],
+                 quick: bool) -> Dict:
+    """One policy arm: same seeds, same schedule, same resources."""
+    fleet = build_fleet(
+        fleet_cfg(), fleet_ecfg(workdir), instances=3, spares=1,
+        force_policy=policy, traffic=_traffic(quick),
+        replenish_spares=True, cost_profile=PROFILE)
+    events = _schedule(fleet_topology(fleet), quick)
+    runner = CampaignRunner(
+        fleet, events, seed=CAMPAIGN_SEED, profile=PROFILE,
+        ttft_target_s=TTFT_TARGET_S, tpot_target_s=TPOT_TARGET_S,
+        slo_window_s=SLO_WINDOW_S)
+    t0 = time.perf_counter()
+    res = runner.run()
+    finished = len(fleet.requests) - fleet.unfinished
+    return {
+        "policy": _policy_name(policy),
+        "slo_burn_s": res.burn["total_burn_s"],
+        "ttft_burn_s": res.burn["ttft_burn_s"],
+        "tpot_burn_s": res.burn["tpot_burn_s"],
+        "n_unserved": res.burn["n_unserved"],
+        "finished": finished,
+        "n": len(fleet.requests),
+        "events_applied": res.events_applied,
+        "events_skipped": res.events_skipped,
+        "recoveries_by_policy": res.forensics["recoveries_by_policy"],
+        "virtual_makespan_s": round(fleet.now_s, 3),
+        "wall_s": round(time.perf_counter() - t0, 3),
+        "forensics": res.forensics,
+    }
+
+
+def counterfactual_table(forensics: Dict) -> list:
+    """Per recovery event: what the arbiter chose, what it was charged,
+    and what the untaken actions were priced at — the 'why' behind the
+    arbiter beating every single forced policy."""
+    table = []
+    for ev in forensics["recoveries"]:
+        if "decision" not in ev:
+            continue
+        table.append({
+            "seq": ev["seq"], "now_s": ev["now_s"], "iid": ev["iid"],
+            "chosen": ev["policy"], "charged_s": ev["charged_s"],
+            "counterfactual_s": ev.get("counterfactual_s", {}),
+            "reason": ev["decision"]["reason"],
+        })
+    return table
+
+
+def multi_model_section(workdir: str, quick: bool) -> Dict:
+    """Two model configs behind one router; a spot preemption takes the
+    minority model's only instance (no matching spare), so serving it
+    again *requires* evict-and-rebalance of a majority-model instance."""
+    cfg = fleet_cfg()
+    models = {
+        "alpha": (cfg, fleet_ecfg(os.path.join(workdir, "alpha"))),
+        "beta": (cfg, fleet_ecfg(os.path.join(workdir, "beta"))),
+    }
+    n = 8 if quick else 16
+    traffic = MixedTraffic([
+        PoissonTraffic(1.0, cfg.vocab_size, prompt_len=8,
+                       max_new_tokens=6, seed=TRAFFIC_SEED,
+                       limit=n, model_id="alpha"),
+        PoissonTraffic(0.7, cfg.vocab_size, prompt_len=8,
+                       max_new_tokens=6, seed=TRAFFIC_SEED + 1,
+                       limit=n, model_id="beta"),
+    ])
+    fleet = build_multi_model_fleet(
+        models, counts={"alpha": 2, "beta": 1}, traffic=traffic,
+        cost_profile=PROFILE, rebalance=True)
+    beta_iid = next(i.iid for i in fleet.serving()
+                    if i.model_id == "beta")
+    # give the trace time to put beta requests in flight, then preempt
+    for _ in range(12):
+        fleet.tick()
+    fleet.drain_instance(beta_iid, migrate=True,
+                         reason="spot preemption notice")
+    fleet.lose_instance(beta_iid, reason="spot preemption",
+                        rebuild=False)
+    health_mid = fleet.fleet_health()
+    fleet.run(max_ticks=3000)
+    rebalances = [e for e in fleet.forensics
+                  if e["policy"] == "rebalance"]
+    finished = len(fleet.requests) - fleet.unfinished
+    out = {
+        "finished": finished, "n": len(fleet.requests),
+        "health_after_preempt": health_mid.state,
+        "rebalanced": len(rebalances),
+        "rebalance_detail": [e["detail"] for e in rebalances],
+        "beta_served_after_rebalance": any(
+            i.model_id == "beta" and i.accepting
+            for i in fleet.instances.values()),
+    }
+    assert out["rebalanced"] >= 1, \
+        "losing the only beta instance must trigger evict-and-rebalance"
+    assert out["beta_served_after_rebalance"], out
+    assert finished == out["n"], out
+    return out
+
+
+def run(quick: bool = False) -> Dict:
+    workdir = tempfile.mkdtemp(prefix="bench_fleet_campaign_")
+    out: Dict = {
+        "unix_time": time.time(), "quick": quick,
+        "campaign_seed": CAMPAIGN_SEED, "traffic_seed": TRAFFIC_SEED,
+        "profile": dataclasses.asdict(PROFILE),
+        "ttft_target_s": TTFT_TARGET_S, "tpot_target_s": TPOT_TARGET_S,
+        "slo_window_s": SLO_WINDOW_S, "policies": {},
+    }
+    # warmup: shared checkpoint + compile cache off the clock
+    warm = build_fleet(fleet_cfg(), fleet_ecfg(workdir), instances=1,
+                       traffic=PoissonTraffic(
+                           2.0, fleet_cfg().vocab_size, prompt_len=8,
+                           max_new_tokens=4, seed=3, limit=2))
+    warm.run(max_ticks=300)
+    for policy in POLICIES:
+        out["policies"][_policy_name(policy)] = run_campaign(
+            workdir, policy, quick)
+    arb = out["policies"]["arbiter"]
+    forced_burns = {p: out["policies"][p]["slo_burn_s"]
+                    for p in ("revive", "restart", "spare")}
+    best_forced = min(forced_burns, key=lambda p: forced_burns[p])
+    out["forced_burns_s"] = forced_burns
+    out["best_forced_policy"] = best_forced
+    out["arbiter_burn_s"] = arb["slo_burn_s"]
+    out["arbiter_beats_best_forced"] = bool(
+        arb["slo_burn_s"] <= forced_burns[best_forced] + 1e-9)
+    out["counterfactuals"] = counterfactual_table(arb["forensics"])
+    out["multi_model"] = multi_model_section(
+        os.path.join(workdir, "mm"), quick)
+    # acceptance gate: the measurement-fed arbiter never burns more SLO
+    # than the best single forced policy on the standard campaign
+    assert out["arbiter_beats_best_forced"], {
+        "arbiter": arb["slo_burn_s"], "forced": forced_burns}
+    return out
+
+
+def write_forensics(out: Dict, directory: str = _ROOT) -> Dict[str, str]:
+    """One forensics JSON per policy arm, sorted keys + fixed separators
+    so identical campaigns produce byte-identical files (the nightly
+    determinism gate diffs these across two runs)."""
+    paths = {}
+    for name, res in out["policies"].items():
+        path = os.path.join(directory, f"FORENSICS_campaign_{name}.json")
+        with open(path, "w") as f:
+            json.dump(res["forensics"], f, sort_keys=True, indent=1,
+                      separators=(",", ": "))
+            f.write("\n")
+        paths[name] = path
+    return paths
+
+
+def save_json(out: Dict, path: str = BENCH_PATH) -> None:
+    from benchmarks.trajectory import append_record
+    slim = dict(out)
+    slim["policies"] = {}
+    for name, res in out["policies"].items():
+        res = dict(res)
+        res.pop("forensics", None)      # full document lives in its file
+        slim["policies"][name] = res
+    append_record(path, slim)
+
+
+def print_table(out: Dict) -> None:
+    print("\n# Chaos campaign: SLO-burn by recovery policy "
+          f"(seed {out['campaign_seed']}, same schedule + trace)")
+    print(f"  {'policy':10s} {'SLO-burn':>10s} {'TTFT':>9s} "
+          f"{'TPOT':>9s} {'done':>8s} {'recoveries':>30s}")
+    for name, res in out["policies"].items():
+        recov = ",".join(f"{k}:{v}" for k, v in
+                         sorted(res["recoveries_by_policy"].items()))
+        print(f"  {name:10s} {res['slo_burn_s']:9.3f}s "
+              f"{res['ttft_burn_s']:8.3f}s {res['tpot_burn_s']:8.3f}s "
+              f"{res['finished']:3d}/{res['n']:<3d} {recov:>30s}")
+    verdict = ("yes" if out["arbiter_beats_best_forced"] else "NO (!)")
+    print(f"  arbiter <= best forced ({out['best_forced_policy']}, "
+          f"{out['forced_burns_s'][out['best_forced_policy']]:.3f}s): "
+          f"{verdict}")
+    print("\n# Arbiter counterfactuals (chosen vs untaken prices)")
+    for row in out["counterfactuals"]:
+        alts = ", ".join(f"{k}={v:.3f}s" for k, v in
+                         sorted(row["counterfactual_s"].items()))
+        print(f"  t={row['now_s']:7.2f}s inst {row['iid']}: "
+              f"{row['chosen']:8s} charged {row['charged_s']:.3f}s "
+              f"vs [{alts}]")
+    mm = out["multi_model"]
+    print("\n# Multi-model fleet: forced evict-and-rebalance")
+    print(f"  health after preempt: {mm['health_after_preempt']}, "
+          f"rebalances: {mm['rebalanced']}, finished "
+          f"{mm['finished']}/{mm['n']}")
+    for d in mm["rebalance_detail"]:
+        print(f"    {d}")
+
+
+if __name__ == "__main__":
+    import sys
+    args = sys.argv[1:]
+    out = run(quick="--quick" in args)
+    print_table(out)
+    save_json(out)
+    fdir = _ROOT
+    for i, a in enumerate(args):
+        if a == "--forensics-dir" and i + 1 < len(args):
+            fdir = args[i + 1]
+    paths = write_forensics(out, fdir)
+    print(f"\nappended to {BENCH_PATH}")
+    for name, p in sorted(paths.items()):
+        print(f"forensics[{name}] -> {p}")

@@ -29,93 +29,19 @@ import dataclasses
 import os
 import tempfile
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.core.fault_codes import ErrorType, Severity
+from benchmarks.fleet_harness import (fleet_cfg as _cfg,
+                                      fleet_ecfg as _ecfg,
+                                      percentile as _percentile,
+                                      run_fleet as _run_fleet)
 from repro.fleet import PoissonTraffic, build_fleet
 from repro.serving.engine import EngineConfig
 
 BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_fleet_slo.json")
-
-FAULT_STEP = 10         # engine step on instance 0 (mid-step MoE loss)
-FAULT_PID = 3           # second MoE executor (pid = num_dp + 1)
-
-
-def _cfg():
-    cfg = get_smoke_config("qwen2-moe-a2.7b")
-    # fully provisioned redundancy (§3.4's common case): the injected
-    # fault is covered by replica slots, so revive is the pure
-    # map-update + precompiled-graph path — no role switch, no capacity
-    # loss.  Restart/spare handle the *same* covered fault, so the
-    # comparison isolates the recovery mechanism itself.
-    return dataclasses.replace(
-        cfg, moe=dataclasses.replace(cfg.moe, num_experts=4,
-                                     num_redundant_experts=4, top_k=2))
-
-
-def _ecfg(workdir: str) -> EngineConfig:
-    return EngineConfig(mode="disaggregated", num_dp=2, num_moe=2,
-                        max_batch=2, max_seq=64, block_size=8,
-                        num_blocks=96, workdir=workdir)
-
-
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
-
-def _run_fleet(workdir: str, policy: Optional[str], n_requests: int,
-               rate: float, faults: Optional[List[Dict]] = None,
-               spares: Optional[int] = None) -> Dict:
-    """One fleet, one arrival trace, optionally injected faults.
-
-    ``faults``: explicit fault list [{"iid", "step", "pid", "component"}]
-    (defaults to the single canonical MoE fault when ``policy`` is set).
-    """
-    traffic = PoissonTraffic(rate, _cfg().vocab_size, prompt_len=8,
-                             max_new_tokens=12, seed=11,
-                             limit=n_requests)
-    if faults is None and policy is not None:
-        faults = [{"iid": 0, "step": FAULT_STEP, "pid": FAULT_PID,
-                   "component": "moe"}]
-    if spares is None:
-        spares = 1 if policy == "spare" else 0
-    fleet = build_fleet(_cfg(), _ecfg(workdir), instances=3,
-                        spares=spares, force_policy=policy,
-                        traffic=traffic)
-    for f in faults or []:
-        fleet.instances[f["iid"]].engine.injector.schedule(
-            f["step"], f["pid"], severity=Severity.L6,
-            error_type=ErrorType.HBM_ECC, component=f["component"],
-            mid_step=True)
-    timeline: List[Dict] = []
-    prev_tokens = 0
-    t_wall = time.perf_counter()
-    for _ in range(4000):
-        fleet.tick()
-        tokens = sum(len(r.output_tokens) for r in fleet.requests)
-        timeline.append({"t_s": round(fleet.now_s, 4),
-                         "new_tokens": tokens - prev_tokens})
-        prev_tokens = tokens
-        if traffic.exhausted and fleet.requests and not fleet.unfinished:
-            break
-    ttfts = fleet.ttfts()
-    stall = max((b["t_s"] - a["t_s"] for a, b in
-                 zip(timeline, timeline[1:])), default=0.0)
-    return {
-        "finished": len(fleet.requests) - fleet.unfinished,
-        "n": len(fleet.requests),
-        "p50_ttft_s": _percentile(ttfts, 50),
-        "p99_ttft_s": _percentile(ttfts, 99),
-        "virtual_makespan_s": round(fleet.now_s, 3),
-        "wall_s": round(time.perf_counter() - t_wall, 3),
-        "worst_tick_gap_s": round(stall, 4),
-        "goodput_timeline": timeline,
-        "arbiter_log": [d.summary() for d in fleet.arbiter.decisions],
-    }
 
 
 # correlated / multi-fault traces (ROADMAP follow-up b): the arbiter is

@@ -32,7 +32,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     choices=[None, "recovery", "lost_experts",
                              "compile_cache", "reinit", "roofline",
-                             "slo", "moe_hotpath", "fleet_slo"])
+                             "slo", "moe_hotpath", "fleet_slo",
+                             "fleet_campaign"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append the CSV-summary rows to PATH as JSON")
     args = ap.parse_args(argv)
@@ -118,6 +119,20 @@ def main(argv=None) -> int:
                              f"{res['p99_degradation_s'] * 1e3:.0f}"))
         csv_rows.append(("fleet_slo_revive_beats_restart",
                          "1" if out["revive_beats_restart"] else "0", ""))
+
+    if want("fleet_campaign"):
+        from benchmarks import fleet_campaign
+        out = fleet_campaign.run(quick=args.quick)
+        fleet_campaign.print_table(out)
+        fleet_campaign.save_json(out)
+        fleet_campaign.write_forensics(out)
+        for name, res in out["policies"].items():
+            csv_rows.append((f"fleet_campaign_{name}_slo_burn",
+                             f"{res['slo_burn_s'] * 1e6:.0f}",
+                             f"finished={res['finished']}/{res['n']}"))
+        csv_rows.append(("fleet_campaign_arbiter_beats_forced",
+                         "1" if out["arbiter_beats_best_forced"] else "0",
+                         f"best_forced={out['best_forced_policy']}"))
 
     if want("slo"):
         from benchmarks import slo_timeline

@@ -87,6 +87,15 @@ class StragglerDetector:
         self.strikes: Dict[int, int] = {}
         self._reported: Set[int] = set()
 
+    def forgive(self, physical_id: int) -> None:
+        """Rejoin support: a device returning to service (cleared
+        transient fault) starts with a clean slate — old samples,
+        strikes and the reported flag would otherwise re-isolate it
+        immediately on stale data."""
+        self.samples.pop(physical_id, None)
+        self.strikes.pop(physical_id, None)
+        self._reported.discard(physical_id)
+
     def record(self, physical_id: int, duration_s: float) -> None:
         buf = self.samples.setdefault(physical_id, [])
         buf.append(duration_s)

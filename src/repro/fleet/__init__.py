@@ -18,14 +18,22 @@ them gets hurt.  This package is that layer:
   cost model fed by measured ``RecoveryReport`` / init timings.
 """
 from repro.fleet.arbiter import ArbiterDecision, CostModel, RecoveryArbiter
-from repro.fleet.builder import build_fleet
+from repro.fleet.builder import build_fleet, build_multi_model_fleet
+from repro.fleet.chaos import (CampaignEvent, CampaignResult,
+                               CampaignRunner, CampaignSchedule,
+                               VirtualCostProfile, fleet_topology,
+                               slo_burn)
 from repro.fleet.instance import FleetInstance, InstanceState
-from repro.fleet.router import FleetRouter
+from repro.fleet.router import FleetHealth, FleetRouter
 from repro.fleet.spares import SparePool
-from repro.fleet.traffic import Arrival, PoissonTraffic, TraceTraffic
+from repro.fleet.traffic import (Arrival, DiurnalTraffic, MixedTraffic,
+                                 PoissonTraffic, TraceTraffic)
 
 __all__ = [
     "ArbiterDecision", "CostModel", "RecoveryArbiter", "build_fleet",
-    "FleetInstance", "InstanceState", "FleetRouter", "SparePool",
-    "Arrival", "PoissonTraffic", "TraceTraffic",
+    "build_multi_model_fleet", "CampaignEvent", "CampaignResult",
+    "CampaignRunner", "CampaignSchedule", "VirtualCostProfile",
+    "fleet_topology", "slo_burn", "FleetInstance", "InstanceState",
+    "FleetHealth", "FleetRouter", "SparePool", "Arrival",
+    "DiurnalTraffic", "MixedTraffic", "PoissonTraffic", "TraceTraffic",
 ]

@@ -207,10 +207,18 @@ class RecoveryArbiter:
             reason = "instance lost: in-place revive impossible"
         if not spare_available:
             feasible.pop("spare", None)
-        if self.force_policy is not None \
-                and self.force_policy in feasible:
-            policy = self.force_policy
-            reason = f"forced policy ({self.force_policy})"
+        if self.force_policy is not None:
+            if self.force_policy in feasible:
+                policy = self.force_policy
+                reason = f"forced policy ({self.force_policy})"
+            else:
+                # deterministic fallback: a forced policy that cannot run
+                # (revive on a lost host, spare with a dry pool) degrades
+                # to drain-and-restart — always feasible — so "X-only"
+                # baseline fleets are well-defined under every fault
+                policy = "restart"
+                reason = (f"forced policy ({self.force_policy}) "
+                          f"infeasible: fell back to restart")
         else:
             policy = min(feasible, key=lambda k: feasible[k])
             if reason is None:

@@ -9,7 +9,7 @@ from cached compiles the way a real standby would.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.fleet.arbiter import CostModel, RecoveryArbiter
@@ -25,12 +25,17 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
                 soft_patience: int = 1,
                 traffic=None, replenish_spares: bool = False,
                 kv_stream: bool = True,
-                prefix_affinity: bool = False) -> FleetRouter:
+                prefix_affinity: bool = False,
+                cost_profile=None,
+                max_backlog: int = 256) -> FleetRouter:
     """``replenish_spares`` turns on background standby repair (one
     rebuild per router tick after an activation); ``kv_stream=False``
     forces token-replay re-prefill on every migration (the verified
     fallback path); ``prefix_affinity`` biases admission so shared
-    prompt prefixes land on the instance whose block cache holds them."""
+    prompt prefixes land on the instance whose block cache holds them.
+    A ``cost_profile`` (:class:`~repro.fleet.chaos.VirtualCostProfile`)
+    switches clock and cost model to pinned virtual costs — the chaos-
+    campaign determinism mode."""
     if instances < 1:
         raise ValueError(f"instances must be >= 1, got {instances!r}")
     if spares < 0:
@@ -44,9 +49,75 @@ def build_fleet(cfg: ModelConfig, ecfg: EngineConfig, *,
     pool = SparePool(
         lambda iid: FleetInstance(iid, _engine(), InstanceState.SPARE),
         size=spares, auto_replenish=replenish_spares) if spares else None
-    arbiter = RecoveryArbiter(
-        CostModel(members[0].engine.init_timings),
-        force_policy=force_policy, soft_patience=soft_patience)
+    cost = (cost_profile.cost_model() if cost_profile is not None
+            else CostModel(members[0].engine.init_timings))
+    arbiter = RecoveryArbiter(cost, force_policy=force_policy,
+                              soft_patience=soft_patience)
     return FleetRouter(members, spares=pool, arbiter=arbiter,
                        traffic=traffic, kv_stream=kv_stream,
-                       prefix_affinity=prefix_affinity)
+                       prefix_affinity=prefix_affinity,
+                       cost_profile=cost_profile,
+                       max_backlog=max_backlog)
+
+
+def build_multi_model_fleet(
+        models: Dict[str, Tuple[ModelConfig, EngineConfig]], *,
+        counts: Dict[str, int],
+        spares: Optional[Dict[str, int]] = None,
+        force_policy: Optional[str] = None,
+        soft_patience: int = 1,
+        traffic=None, kv_stream: bool = True,
+        cost_profile=None, max_backlog: int = 256,
+        rebalance: bool = True) -> FleetRouter:
+    """A fleet serving several model configs behind one router.
+
+    ``models`` maps model_id -> (ModelConfig, EngineConfig); each model
+    needs its own workdir (weights differ).  ``counts`` says how many
+    serving instances each model gets; ``spares`` how many standbys per
+    model (pooled — acquisition is model-matched).  With ``rebalance``,
+    the router gets a rebuilder per model, so a model that loses its
+    last instance can evict-and-rebalance an over-provisioned peer."""
+    if not models:
+        raise ValueError("build_multi_model_fleet needs >= 1 model")
+
+    def _engine(model_id: str) -> InferenceEngine:
+        cfg, ecfg = models[model_id]
+        return InferenceEngine(cfg, dataclasses.replace(ecfg))
+
+    def _make(iid: int, model_id: str,
+              state: InstanceState = InstanceState.SERVING
+              ) -> FleetInstance:
+        return FleetInstance(iid, _engine(model_id), state,
+                             model_id=model_id)
+
+    members, iid = [], 0
+    for model_id in sorted(counts):
+        for _ in range(counts[model_id]):
+            members.append(_make(iid, model_id))
+            iid += 1
+    if not members:
+        raise ValueError("counts produced an empty fleet")
+
+    pool = None
+    spare_specs = [m for m in sorted(spares or {})
+                   for _ in range(((spares or {})[m]))]
+    if spare_specs:
+        cursor = {"i": 0}
+
+        def _spare_factory(sid: int) -> FleetInstance:
+            model_id = spare_specs[cursor["i"] % len(spare_specs)]
+            cursor["i"] += 1
+            return _make(sid, model_id, InstanceState.SPARE)
+
+        pool = SparePool(_spare_factory, size=len(spare_specs))
+
+    cost = (cost_profile.cost_model() if cost_profile is not None
+            else CostModel(members[0].engine.init_timings))
+    arbiter = RecoveryArbiter(cost, force_policy=force_policy,
+                              soft_patience=soft_patience)
+    rebuilders = ({m: (lambda i, m=m: _make(i, m)) for m in models}
+                  if rebalance else None)
+    return FleetRouter(members, spares=pool, arbiter=arbiter,
+                       traffic=traffic, kv_stream=kv_stream,
+                       cost_profile=cost_profile,
+                       rebuilders=rebuilders, max_backlog=max_backlog)

@@ -32,16 +32,26 @@ class InstanceState(enum.Enum):
 
 class FleetInstance:
     def __init__(self, iid: int, engine: InferenceEngine,
-                 state: InstanceState = InstanceState.SERVING):
+                 state: InstanceState = InstanceState.SERVING,
+                 model_id: str = "default"):
         self.iid = iid
         self.engine = engine
         self.state = state
+        # multi-model fleets: which model config this instance serves;
+        # the router only routes/migrates matching requests here
+        self.model_id = model_id
         self.restarts = 0
         self.decommission_reason: Optional[str] = None
 
     def __repr__(self):
         return (f"FleetInstance(iid={self.iid}, {self.state.value}, "
+                f"model={self.model_id}, "
                 f"load={self.load if self.state != InstanceState.DEAD else '-'})")
+
+    def serves(self, model_id: Optional[str]) -> bool:
+        """Can this instance serve a request tagged ``model_id``?
+        (None = untagged request, any instance will do.)"""
+        return model_id is None or self.model_id == model_id
 
     # -- routing surface --------------------------------------------------------
 

@@ -49,14 +49,22 @@ class SparePool:
     def available(self) -> int:
         return len(self.warm)
 
-    def acquire(self) -> Optional[FleetInstance]:
-        """Hand a warm standby to the router (None if the pool is dry)."""
-        if not self.warm:
-            return None
-        inst = self.warm.pop(0)
-        inst.state = InstanceState.SERVING
-        self.activations += 1
-        return inst
+    def available_for(self, model_id: Optional[str] = None) -> int:
+        """Warm standbys able to serve ``model_id`` (None = any)."""
+        return sum(1 for inst in self.warm if inst.serves(model_id))
+
+    def acquire(self, model_id: Optional[str] = None
+                ) -> Optional[FleetInstance]:
+        """Hand a warm standby to the router (None if the pool is dry).
+        With ``model_id``, only a matching spare qualifies — a standby
+        built for another model config is useless for this fault."""
+        for i, inst in enumerate(self.warm):
+            if inst.serves(model_id):
+                inst = self.warm.pop(i)
+                inst.state = InstanceState.SERVING
+                self.activations += 1
+                return inst
+        return None
 
     @property
     def deficit(self) -> int:

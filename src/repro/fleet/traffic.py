@@ -22,6 +22,9 @@ class Arrival:
     at_s: float                 # arrival time on the driver's clock
     prompt_tokens: Tuple[int, ...]
     max_new_tokens: int
+    # multi-model fleets: which model config this request needs (None =
+    # any instance may serve it)
+    model_id: Optional[str] = None
 
 
 class PoissonTraffic:
@@ -37,7 +40,8 @@ class PoissonTraffic:
                  prompt_len=8, max_new_tokens: int = 16,
                  seed: int = 0, limit: Optional[int] = None,
                  shared_prefix_len: int = 0,
-                 shared_fraction: float = 0.0):
+                 shared_fraction: float = 0.0,
+                 model_id: Optional[str] = None):
         if rate_per_s <= 0:
             raise ValueError(f"rate_per_s must be > 0, got {rate_per_s!r}")
         self.rate = rate_per_s
@@ -48,12 +52,18 @@ class PoissonTraffic:
                             else (int(prompt_len),))
         self.max_new_tokens = max_new_tokens
         self.limit = limit
+        self.model_id = model_id
         self.shared_fraction = shared_fraction
         self.shared_prefix = tuple(
             int(t) for t in self.rng.integers(0, vocab_size,
                                               shared_prefix_len))
-        self._next_at = float(self.rng.exponential(1.0 / self.rate))
+        self._next_at = self._gap(0.0)
         self._emitted = 0
+
+    def _gap(self, now_s: float) -> float:
+        """Seconds until the next arrival after ``now_s`` (subclasses
+        modulate the rate here)."""
+        return now_s + float(self.rng.exponential(1.0 / self.rate))
 
     def _prompt(self) -> Tuple[int, ...]:
         n = int(self.rng.choice(self.prompt_lens))
@@ -77,9 +87,10 @@ class PoissonTraffic:
         while self._next_at <= now_s and (
                 self.limit is None or self._emitted < self.limit):
             out.append(Arrival(self._next_at, self._prompt(),
-                               self.max_new_tokens))
+                               self.max_new_tokens,
+                               model_id=self.model_id))
             self._emitted += 1
-            self._next_at += float(self.rng.exponential(1.0 / self.rate))
+            self._next_at = self._gap(self._next_at)
         return out
 
     @property
@@ -90,6 +101,68 @@ class PoissonTraffic:
     def next_at(self) -> Optional[float]:
         """Arrival time of the next pending request (None if exhausted)."""
         return None if self.exhausted else self._next_at
+
+
+class DiurnalTraffic(PoissonTraffic):
+    """Nonhomogeneous Poisson arrivals with a sinusoidal daily cycle.
+
+    rate(t) = base · (1 + amplitude · sin(2πt / period_s + phase)) — the
+    long diurnal trace chaos campaigns run against, so fault processes
+    land on peaks and troughs rather than one constant load.  Sampled by
+    thinning against the peak rate: candidate gaps are drawn at
+    base·(1+amplitude) and accepted with probability rate(t)/peak, which
+    keeps the arrival stream an exact seeded function of the clock.
+    """
+
+    def __init__(self, base_rate_per_s: float, vocab_size: int, *,
+                 amplitude: float = 0.5, period_s: float = 60.0,
+                 phase: float = 0.0, **kw):
+        if not 0.0 <= amplitude < 1.0:
+            raise ValueError(
+                f"amplitude must be in [0, 1), got {amplitude!r}")
+        self.base_rate = base_rate_per_s
+        self.amplitude = amplitude
+        self.period_s = period_s
+        self.phase = phase
+        super().__init__(base_rate_per_s, vocab_size, **kw)
+
+    def rate_at(self, t_s: float) -> float:
+        return self.base_rate * (1.0 + self.amplitude * float(
+            np.sin(2.0 * np.pi * t_s / self.period_s + self.phase)))
+
+    def _gap(self, now_s: float) -> float:
+        peak = self.base_rate * (1.0 + self.amplitude)
+        t = now_s
+        while True:                      # Lewis–Shedler thinning
+            t += float(self.rng.exponential(1.0 / peak))
+            if self.rng.random() <= self.rate_at(t) / peak:
+                return t
+
+
+class MixedTraffic:
+    """Merge several arrival sources into one stream (multi-model
+    fleets: each model's traffic keeps its own seed/rate/shape, the
+    router sees one time-ordered arrival sequence)."""
+
+    def __init__(self, sources: Sequence):
+        if not sources:
+            raise ValueError("MixedTraffic needs at least one source")
+        self.sources = list(sources)
+
+    def due(self, now_s: float) -> List[Arrival]:
+        out: List[Arrival] = []
+        for src in self.sources:
+            out.extend(src.due(now_s))
+        return sorted(out, key=lambda a: a.at_s)
+
+    @property
+    def exhausted(self) -> bool:
+        return all(s.exhausted for s in self.sources)
+
+    @property
+    def next_at(self) -> Optional[float]:
+        nxt = [s.next_at for s in self.sources if s.next_at is not None]
+        return min(nxt) if nxt else None
 
 
 class TraceTraffic:

