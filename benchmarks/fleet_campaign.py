@@ -62,9 +62,15 @@ def _traffic(quick: bool):
     # base 2.0/s with these limits spans the whole campaign horizon
     # (~38s of 45s quick, ~118s of 120s full) so the fault processes
     # land on live traffic rather than an idle fleet
+    # heavy-tailed (lognormal, median 8) request shapes: SLO burn is
+    # scored against the occasional huge request queueing through a
+    # recovery stall, not a uniform-shape fiction; clamps keep
+    # prompt + output inside the instances' max_seq=64
     return DiurnalTraffic(
         2.0, fleet_cfg().vocab_size, amplitude=0.5, period_s=40.0,
         prompt_len=8, max_new_tokens=8, seed=TRAFFIC_SEED,
+        length_dist="lognormal", length_sigma=0.75,
+        max_prompt_len=32, max_output_len=24,
         limit=80 if quick else 240)
 
 

@@ -46,12 +46,18 @@ SWEEP = [
     ("prefill_2k", "prefill", 2048, 16, 2, 256, 512),
 ]
 
-# (name, B, max_blk, block_size, H, Hkv, Dh, E, top_k, D, F) — one
-# attention+MoE block at decode shapes (CPU-sized; see SWEEP note)
+# (name, B, max_blk, block_size, H, Hkv, Dh, E, top_k, D, F, Fs) — one
+# attention+MoE block at decode shapes (CPU-sized; see SWEEP note).
+# Fs > 0 adds the shared-expert SwiGLU the megakernel folds in-kernel.
+# ``megastep_deploy`` is the deployment-shape row: deepseek_v3-class
+# d_model=7168, where the D-blocked megakernel pages weights through
+# VMEM instead of resident tiles (on CPU both sides are jnp, so the row
+# tracks op-boundary overhead at real hidden sizes).
 DECODE_STEP_SWEEP = [
-    ("megastep_b8", 8, 8, 16, 8, 2, 64, 8, 2, 256, 512),
-    ("megastep_b32", 32, 8, 16, 8, 2, 64, 16, 2, 256, 512),
-    ("megastep_b128", 128, 16, 16, 8, 2, 64, 32, 4, 256, 512),
+    ("megastep_b8", 8, 8, 16, 8, 2, 64, 8, 2, 256, 512, 0),
+    ("megastep_b32", 32, 8, 16, 8, 2, 64, 16, 2, 256, 512, 0),
+    ("megastep_b128", 128, 16, 16, 8, 2, 64, 32, 4, 256, 512, 0),
+    ("megastep_deploy", 8, 8, 16, 16, 2, 64, 8, 2, 7168, 512, 512),
 ]
 
 
@@ -116,6 +122,7 @@ def run(quick: bool = False, use_pallas: bool = None,
         })
     rows.extend(run_decode_step(quick=quick, use_pallas=use_pallas,
                                 iters=iters))
+    rows.extend(run_spec_decode(quick=quick, iters=iters))
     return rows
 
 
@@ -134,12 +141,15 @@ def run_decode_step(quick: bool = False, use_pallas: bool = None,
 
     if use_pallas is None:
         use_pallas = jax.default_backend() not in ("cpu",)
-    sweep = DECODE_STEP_SWEEP[:1] if quick else DECODE_STEP_SWEEP
+    # quick keeps the smallest shape plus the deployment-shape row (the
+    # one the D-blocking work exists for), so CI gates both
+    sweep = ([DECODE_STEP_SWEEP[0], DECODE_STEP_SWEEP[-1]] if quick
+             else DECODE_STEP_SWEEP)
     rows = []
-    for name, B, max_blk, bs, H, Hkv, Dh, E, k, D, F in sweep:
+    for name, B, max_blk, bs, H, Hkv, Dh, E, k, D, F, Fs in sweep:
         nb = max_blk * B + 1
         ks = jax.random.split(jax.random.fold_in(
-            jax.random.PRNGKey(11), B * E), 11)
+            jax.random.PRNGKey(11), B * E), 14)
         q = jax.random.normal(ks[0], (B, H, Dh)) * 0.3
         k_pool = jax.random.normal(ks[1], (nb, bs, Hkv, Dh)) * 0.3
         v_pool = jax.random.normal(ks[2], (nb, bs, Hkv, Dh)) * 0.3
@@ -157,6 +167,12 @@ def run_decode_step(quick: bool = False, use_pallas: bool = None,
         g = jax.random.normal(ks[8], (E, D, F)) * 0.05
         u = jax.random.normal(ks[9], (E, D, F)) * 0.05
         d = jax.random.normal(ks[10], (E, F, D)) * 0.05
+        if Fs:
+            sg = jax.random.normal(ks[11], (D, Fs)) * 0.05
+            su = jax.random.normal(ks[12], (D, Fs)) * 0.05
+            sd = jax.random.normal(ks[13], (Fs, D)) * 0.05
+        else:
+            sg = su = sd = None
         cap = capacity(B * k, E, 1.25)
         off = jnp.int32(0)
 
@@ -182,18 +198,23 @@ def run_decode_step(quick: bool = False, use_pallas: bool = None,
             y = ops.moe_dispatch_ffn_combine(
                 h2, g, u, d, w, phys.astype(jnp.int32), alive, off,
                 cap=cap, e_local=E, use_pallas=use_pallas)
-            return x2 + y
+            out = x2 + y
+            if Fs:
+                # the separate shared-expert launch the megakernel folds
+                out = out + (jax.nn.silu(h2 @ sg) * (h2 @ su)) @ sd
+            return out
 
         args = (q, k_pool, v_pool, bt, sl, st, x, w_post, ln2, router_w,
                 rcnt, l2p, mask, g, u, d, off)
         t_comp = _time_fn(lambda: composed(*args), iters=iters)
         t_mega = _time_fn(lambda: ops.decode_megastep(
             q, k_pool, v_pool, bt, sl, st, x, w_post, ln2, router_w,
-            l2p, rcnt, mask, g, u, d, off, top_k=k, cap=cap, e_local=E,
+            l2p, rcnt, mask, g, u, d, off, sg, su, sd,
+            top_k=k, cap=cap, e_local=E,
             use_pallas=use_pallas)[0], iters=iters)
         rows.append({
             "name": name, "kind": "decode_step", "T": B, "E": E,
-            "top_k": k, "D": D, "F": F, "cap": cap,
+            "top_k": k, "D": D, "F": F, "cap": cap, "F_shared": Fs,
             "composed_us": t_comp * 1e6, "mega_us": t_mega * 1e6,
             "metric_us": t_mega * 1e6,
             "speedup": t_comp / max(t_mega, 1e-12),
@@ -202,11 +223,78 @@ def run_decode_step(quick: bool = False, use_pallas: bool = None,
     return rows
 
 
+def run_spec_decode(quick: bool = False, iters: int = 5) -> List[Dict]:
+    """Speculative-decode efficiency row: a small collocated engine
+    serves a repetitive trace with self-speculation on (windows ride
+    the compiled chunk graph), and the row records microseconds per
+    emitted token (the gate metric) next to accepted tokens per
+    speculative step and the planned-window-width histogram — the
+    speculation-efficiency surface, not just latency.
+
+    Serve repetitions are capped at min(iters, 3): one engine serve is
+    seconds-long, so best-of-12 timing would dominate the gate job; the
+    cap is recorded in the row as ``serves``.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import EngineConfig, InferenceEngine
+    from repro.serving.sampling import SamplingParams
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    workdir = tempfile.mkdtemp(prefix="bench_spec_decode_")
+    ec = EngineConfig(mode="collocated", num_dp=1, max_batch=4,
+                      max_seq=96, block_size=8, num_blocks=96,
+                      workdir=workdir, spec_window=6,
+                      sampling=SamplingParams(temperature=0.0, seed=3))
+    eng = InferenceEngine(cfg, ec)
+    # repetitive trace: the n-gram proposer drafts from recurrence, so
+    # this measures the accept path, not the empty-proposal fallback
+    prompts = [[5, 9, 2, 7] * 5, [3, 1] * 8, [4, 4, 8] * 6, [2, 6] * 9]
+
+    def serve():
+        reqs = [eng.submit(list(p), 24) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run(max_steps=600)
+        dt = time.perf_counter() - t0
+        assert all(r.state.value == "finished" for r in reqs)
+        return dt, sum(len(r.output_tokens) for r in reqs)
+
+    serve()                          # warmup: compiles off the clock
+    serves = 1 if quick else min(iters, 3)
+    best_us = float("inf")
+    for _ in range(serves):
+        dt, toks = serve()
+        best_us = min(best_us, dt / max(toks, 1) * 1e6)
+    stats = eng.prefill_stats()
+    hist = eng.spec_histogram()
+    shutil.rmtree(workdir, ignore_errors=True)
+    windows = max(stats["spec_windows"], 1)
+    return [{
+        "name": "spec_decode_greedy", "kind": "spec_decode",
+        "T": len(prompts), "metric_us": best_us,
+        "accepted_per_step": stats["spec_emitted"] / windows,
+        "spec_windows": stats["spec_windows"],
+        "spec_drafts": stats["spec_drafts"],
+        "spec_accepted": stats["spec_accepted"],
+        "spec_emitted": stats["spec_emitted"],
+        "window_hist": {str(g): n for g, n in sorted(hist.items())},
+        "serves": serves,
+        "backend": jax.default_backend(),
+        # the engine picks its kernels per-backend; tag the row like the
+        # kernel rows so the gate's row filter keeps it comparable
+        "use_pallas": jax.default_backend() not in ("cpu",),
+    }]
+
+
 def print_table(rows: List[Dict]) -> None:
     impl = "pallas" if rows and rows[0]["use_pallas"] else "jnp fallback"
     backend = rows[0]["backend"] if rows else "?"
     layer = [r for r in rows if "fused_us" in r]
     step = [r for r in rows if "mega_us" in r]
+    spec = [r for r in rows if "accepted_per_step" in r]
     if layer:
         print(f"\n# MoE hot path: dense-scatter vs fused ({impl}, "
               f"backend={backend})")
@@ -228,6 +316,19 @@ def print_table(rows: List[Dict]) -> None:
                   f"{r['E']:4d} {r['top_k']:3d} {r['cap']:5d} "
                   f"{r['composed_us']:12.0f} {r['mega_us']:10.0f} "
                   f"{r['speedup']:7.2f}x")
+    if spec:
+        print(f"\n# Speculative decode (engine, greedy, "
+              f"backend={backend})")
+        print(f"{'shape':18s} {'us/token':>10s} {'acc/step':>9s} "
+              f"{'windows':>8s} {'drafts':>7s} {'accepted':>9s} "
+              f"{'window hist':>20s}")
+        for r in spec:
+            hist = ",".join(f"{g}:{n}" for g, n in
+                            sorted(r["window_hist"].items()))
+            print(f"{r['name']:18s} {r['metric_us']:10.0f} "
+                  f"{r['accepted_per_step']:9.2f} "
+                  f"{r['spec_windows']:8d} {r['spec_drafts']:7d} "
+                  f"{r['spec_accepted']:9d} {hist:>20s}")
 
 
 def save_json(rows: List[Dict], path: str = BENCH_PATH, *,

@@ -48,7 +48,18 @@ def main(argv=None) -> int:
         moe_hotpath.print_table(rows)
         moe_hotpath.save_json(rows, quick=args.quick)
         for r in rows:
-            if "mega_us" in r:
+            if "accepted_per_step" in r:
+                # speculation efficiency, not just latency: accepted
+                # tokens per speculative step + window-width histogram
+                hist = "|".join(f"{g}:{n}" for g, n in
+                                sorted(r["window_hist"].items()))
+                csv_rows.append((f"moe_hotpath_{r['name']}",
+                                 f"{r['metric_us']:.0f}",
+                                 f"accepted_per_step="
+                                 f"{r['accepted_per_step']:.2f},"
+                                 f"windows={r['spec_windows']},"
+                                 f"hist={hist}"))
+            elif "mega_us" in r:
                 csv_rows.append((f"moe_hotpath_{r['name']}_mega",
                                  f"{r['mega_us']:.0f}",
                                  f"composed_us={r['composed_us']:.0f},"

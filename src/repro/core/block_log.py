@@ -119,6 +119,12 @@ class BlockLog:
         self._pool_undo = None
         return undo
 
+    def peek_pool_undo(self):
+        """Non-destructive read of the in-flight step's captured write
+        set — the speculative-decode verify phase restores the *rejected*
+        rows from it mid-compute while the full payload stays armed."""
+        return self._pool_undo
+
     def __len__(self) -> int:
         return len(self._ops)
 

@@ -49,10 +49,16 @@ class GraphCache:
         return key in self._exec
 
     def precompile(self, key: Tuple, fn: Callable, arg_shapes: Tuple,
-                   static_argnames=()) -> CompileTiming:
-        """AOT lower+compile now so recovery finds a ready executable."""
+                   static_argnames=(), donate_argnums=()) -> CompileTiming:
+        """AOT lower+compile now so recovery finds a ready executable.
+
+        ``donate_argnums`` donates those inputs' buffers to the outputs
+        (the engine donates the KV pool into decode/chunk steps — safe
+        because the §3.3 row-level undo snapshots the written rows on the
+        host *before* the step runs)."""
         t0 = time.perf_counter()
-        lowered = jax.jit(fn, static_argnames=static_argnames).lower(*arg_shapes)
+        lowered = jax.jit(fn, static_argnames=static_argnames,
+                          donate_argnums=donate_argnums).lower(*arg_shapes)
         t1 = time.perf_counter()
         compiled = lowered.compile()
         t2 = time.perf_counter()
@@ -61,8 +67,8 @@ class GraphCache:
         self.timings.append(tm)
         return tm
 
-    def get_or_compile(self, key: Tuple, fn: Callable, arg_shapes: Tuple
-                       ) -> Tuple[Any, CompileTiming]:
+    def get_or_compile(self, key: Tuple, fn: Callable, arg_shapes: Tuple,
+                       donate_argnums=()) -> Tuple[Any, CompileTiming]:
         """Recovery-time lookup: precompiled hit is ~free; otherwise a real
         (possibly persistent-cache-served) compile happens and is timed."""
         if key in self._exec:
@@ -70,7 +76,7 @@ class GraphCache:
             self.timings.append(tm)
             return self._exec[key], tm
         t0 = time.perf_counter()
-        lowered = jax.jit(fn).lower(*arg_shapes)
+        lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*arg_shapes)
         t1 = time.perf_counter()
         compiled = lowered.compile()
         t2 = time.perf_counter()

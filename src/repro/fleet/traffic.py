@@ -34,16 +34,39 @@ class PoissonTraffic:
     mixed long/short workload — one is drawn per arrival).  With
     ``shared_prefix_len`` > 0, a fraction ``shared_fraction`` of
     arrivals start with one fixed random "system prompt" of that length
-    — the prefix-cache-heavy production shape."""
+    — the prefix-cache-heavy production shape.
+
+    ``length_dist="lognormal"`` replaces the fixed request shape with
+    seeded heavy-tailed draws: the configured prompt length and
+    ``max_new_tokens`` become the *medians* of lognormal distributions
+    with log-space sigma ``length_sigma`` (prompt drawn first, then
+    output, one pair per arrival), clamped to ``max_prompt_len`` /
+    ``max_output_len`` when given.  Production traces are heavy-tailed
+    — a few huge requests dominate queueing during recovery stalls —
+    so campaigns should not score SLO burn against a uniform-shape
+    fiction.  The default path (``length_dist=None``) makes exactly the
+    same rng draws as before, so existing seeded traces replay
+    unchanged."""
 
     def __init__(self, rate_per_s: float, vocab_size: int, *,
                  prompt_len=8, max_new_tokens: int = 16,
                  seed: int = 0, limit: Optional[int] = None,
                  shared_prefix_len: int = 0,
                  shared_fraction: float = 0.0,
+                 length_dist: Optional[str] = None,
+                 length_sigma: float = 0.75,
+                 max_prompt_len: Optional[int] = None,
+                 max_output_len: Optional[int] = None,
                  model_id: Optional[str] = None):
         if rate_per_s <= 0:
             raise ValueError(f"rate_per_s must be > 0, got {rate_per_s!r}")
+        if length_dist not in (None, "lognormal"):
+            raise ValueError(
+                f"length_dist must be None or 'lognormal', got "
+                f"{length_dist!r}")
+        if length_sigma <= 0:
+            raise ValueError(
+                f"length_sigma must be > 0, got {length_sigma!r}")
         self.rate = rate_per_s
         self.rng = np.random.default_rng(seed)
         self.vocab_size = vocab_size
@@ -51,6 +74,10 @@ class PoissonTraffic:
                             if isinstance(prompt_len, (tuple, list))
                             else (int(prompt_len),))
         self.max_new_tokens = max_new_tokens
+        self.length_dist = length_dist
+        self.length_sigma = length_sigma
+        self.max_prompt_len = max_prompt_len
+        self.max_output_len = max_output_len
         self.limit = limit
         self.model_id = model_id
         self.shared_fraction = shared_fraction
@@ -65,8 +92,18 @@ class PoissonTraffic:
         modulate the rate here)."""
         return now_s + float(self.rng.exponential(1.0 / self.rate))
 
+    def _heavy_len(self, median: int, cap: Optional[int]) -> int:
+        """One lognormal draw with the given median (exp(mu) = median),
+        at least 1, clamped to ``cap`` when set."""
+        n = int(round(median * float(
+            np.exp(self.length_sigma * self.rng.standard_normal()))))
+        n = max(1, n)
+        return min(n, cap) if cap is not None else n
+
     def _prompt(self) -> Tuple[int, ...]:
         n = int(self.rng.choice(self.prompt_lens))
+        if self.length_dist:
+            n = self._heavy_len(n, self.max_prompt_len)
         if (self.shared_prefix
                 and self.rng.random() < self.shared_fraction):
             # the drawn length is honored: short shared arrivals are a
@@ -86,8 +123,11 @@ class PoissonTraffic:
         out: List[Arrival] = []
         while self._next_at <= now_s and (
                 self.limit is None or self._emitted < self.limit):
-            out.append(Arrival(self._next_at, self._prompt(),
-                               self.max_new_tokens,
+            prompt = self._prompt()        # drawn before the output len
+            mnt = (self._heavy_len(self.max_new_tokens,
+                                   self.max_output_len)
+                   if self.length_dist else self.max_new_tokens)
+            out.append(Arrival(self._next_at, prompt, mnt,
                                model_id=self.model_id))
             self._emitted += 1
             self._next_at = self._gap(self._next_at)

@@ -6,31 +6,50 @@ chain of kernels with HBM round-trips between them:
 
   paged_attention -> (B, H*Dh) out -> wo matmul -> residual -> rms_norm
   -> router matmul -> top_k -> replica select -> sort pre-pass ->
-  fused MoE dispatch/FFN/combine -> residual
+  fused MoE dispatch/FFN/combine -> shared-expert FFN -> residual
 
 This kernel fuses the whole chain into **one** ``pallas_call`` per
-block.  A single flat sequential grid runs three phases (TPU grids with
+block.  A single flat sequential grid runs five phases (TPU grids with
 ``arbitrary`` semantics execute in order, so cross-phase scratch carries
-are race-free):
+are race-free).  Only the *activations* — (B, D) residual/``h2`` tiles
+and the (B, H*Dh) attention output — stay whole in VMEM (decode B is
+small); every weight matrix with a ``d_model`` axis streams through the
+kernel one D-page at a time, so deployment hidden sizes
+(deepseek_v3/kimi_k2-class D = 7168) never have to fit a weight's full
+D extent on chip:
 
   * **attention** (steps ``[0, B*max_blk)``): the paged-attention online
     softmax of ``kernels.paged_attention`` — page ``j`` of row ``b`` is
-    DMA'd via the scalar-prefetched block table; on each row's last page
-    the output is projected through ``w_post`` and added to the residual
-    stream, writing ``x2`` into the output tile (which stays VMEM-
-    resident across all phases — the (B, H*Dh) attention output and the
-    (B, D) residual never round-trip HBM).
-  * **route** (step ``B*max_blk``): RMS norm, router matmul, iterative
-    top-k (k argmax passes — decode-shaped, k <= 8), replica selection
-    from the MoERuntime arrays, and the per-expert slot tables built by
-    a sequential scan (decode batches are small enough that the sort
-    pre-pass of ``moe_fused`` degenerates to this O(B*k) scan).  This
-    subsumes kernel target (b): router top-k + replica select live in
-    the megakernel's grouping pre-pass.
-  * **MoE** (steps after): the grouped-SwiGLU expert pipeline of
-    ``kernels.moe_fused`` — gather rows from the resident ``h2`` tile at
-    the first F-block, accumulate the FFN, scatter-combine ``wgt * acc``
-    into the resident output tile on the last.
+    gathered per row via the scalar-prefetched block table (the grid
+    pipeline revolves these KV page buffers, i.e. the DMA for row
+    ``b``'s next page overlaps the current page's compute); each row's
+    normalized (H, Dh) output lands in a VMEM scratch tile.
+  * **project** (``nd = D/block_d`` steps): the post-attention
+    projection, one D-page per step — ``y[:, dp] = x[:, dp] +
+    o @ w_post[:, dp]`` with the (H*Dh, block_d) weight page streamed
+    (and double-buffered) by the pipeline; a running sum of squares
+    accumulates for the norm.
+  * **route** (``nd`` steps): RMS norm one D-page at a time (the sum of
+    squares is already complete), router logits accumulated over
+    (block_d, E) router pages; the last page finishes with the masked
+    softmax, iterative top-k (k argmax passes — decode-shaped, k <= 8),
+    replica selection from the MoERuntime arrays, and the per-expert
+    slot tables built by a sequential scan (decode batches are small
+    enough that the sort pre-pass of ``moe_fused`` degenerates to this
+    O(B*k) scan).
+  * **shared experts** (``ns * 2*nd`` steps, skipped when the config has
+    none): the dense shared-expert SwiGLU folded into the launch — for
+    each shared F-block, ``nd`` contraction steps accumulate the hidden
+    over streamed (block_d, Fs_b) weight pages, then ``nd`` output
+    steps scatter ``act @ w_down[f, dp]`` pages back into the resident
+    ``y`` tile.
+  * **MoE** (``E * nf * 2*nd`` steps): the grouped-SwiGLU expert
+    pipeline of ``kernels.moe_fused`` with the same D-paging — gather
+    rows from the resident ``h2`` tile at each expert's first step,
+    ``nd`` contraction steps per F-block over streamed (1, block_d, Fb)
+    gate/up pages, ``nd`` output steps over (1, Fb, block_d) down
+    pages, and a weighted scatter-combine into ``y`` on the expert's
+    last step.
 
 Everything mutable by recovery — block tables, seq lens, window starts,
 ``expert_offset`` and the MoERuntime ``l2p``/``replica_count``/
@@ -38,13 +57,10 @@ Everything mutable by recovery — block tables, seq lens, window starts,
 ``fail_rank``/``mask_experts``/migration/chunked prefill never retrigger
 compilation.
 
-Current limitation (documented, matching ``moe_fused``): ``x``/``y``/
-``h2``/``w_post``/``router_w`` use whole-array VMEM block specs, so the
-kernel is decode/chunk-shaped (B = decode batch or chunk width); the
-capacity axis is a single block (decode caps are small).  Shared
-experts are a dense FFN over ``h2`` and stay outside (they are
-compute-bound GEMMs, not paged-memory-bound; the ``h2`` output exists
-so callers apply them without recomputing the norm).
+Remaining limitation: the capacity axis is a single block (decode caps
+are small) and VMEM still scales with B * H * Dh for the attention
+scratch, so prefill-shaped batches belong to the flash kernel, not this
+one.
 """
 from __future__ import annotations
 
@@ -63,16 +79,24 @@ NEG_INF = -1e30
 def _megastep_kernel(bt_ref, sl_ref, st_ref, off_ref,
                      q_ref, k_ref, v_ref, x_ref, wpost_ref, ln2_ref,
                      router_ref, l2p_ref, rcnt_ref, mask_ref,
+                     sgate_ref, sup_ref, sdown_ref,
                      gate_ref, up_ref, down_ref,
                      y_ref, h2_ref,
-                     acc_ref, m_ref, l_ref, xs_ref, accm_ref,
+                     acc_ref, m_ref, l_ref, o_ref, ssq_ref, lg_ref,
+                     xs_ref, accm_ref, hg_ref, hu_ref, hgs_ref, hus_ref,
                      sel_ref, wsel_ref, tok_ref, wgt_ref, cnt_ref, *,
-                     bs: int, n_attn: int, nf: int, cap: int, top_k: int,
-                     e_local: int, e_log: int, scale: float, eps: float):
+                     bs: int, n_attn: int, nd: int, nf: int, ns: int,
+                     cap: int, top_k: int, e_local: int, e_log: int,
+                     scale: float, eps: float, d_model: int, block_d: int):
     t = pl.program_id(0)
-    attn_steps = pl.num_programs(0) - 1 - e_local * nf  # == B * n_attn
+    B = y_ref.shape[0]
+    attn_steps = B * n_attn
+    p0 = attn_steps            # projection phase start
+    r0 = p0 + nd               # norm/route phase start
+    s0 = r0 + nd               # shared-expert phase start
+    m0 = s0 + ns * 2 * nd      # routed-expert phase start
 
-    # ---- phase A: paged-attention online softmax + post-projection ----
+    # ---- phase A: paged-attention online softmax ----------------------
     @pl.when(t < attn_steps)
     def _attention():
         b = t // n_attn
@@ -118,85 +142,154 @@ def _megastep_kernel(bt_ref, sl_ref, st_ref, off_ref,
         m_ref[...] = m_new
 
         @pl.when(j == n_attn - 1)
-        def _project():
+        def _finish_row():
             o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)   # (H, Da)
-            o_flat = o.reshape(1, H * Da).astype(x_ref.dtype)
-            proj = jnp.dot(o_flat, wpost_ref[...],
-                           preferred_element_type=jnp.float32)  # (1, D)
-            y_ref[b, :] = x_ref[b, :] + proj[0].astype(y_ref.dtype)
+            o_ref[b, :] = o.reshape(H * Da)
 
-    # ---- phase R: norm + router top-k + replica select + grouping ----
-    @pl.when(t == attn_steps)
-    def _route():
-        x2 = y_ref[...]                                   # (B, D) == x+attn
-        B = x2.shape[0]
-        xf = x2.astype(jnp.float32)
-        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-        h2 = (xf * jax.lax.rsqrt(var + eps)).astype(x2.dtype) * ln2_ref[...]
-        h2_ref[...] = h2
-        logits = jnp.dot(h2, router_ref[...],
-                         preferred_element_type=jnp.float32)  # (B, E_log)
-        logits = jnp.where(mask_ref[...] != 0, logits, NEG_INF)
-        mx = jnp.max(logits, axis=-1, keepdims=True)
-        g = jnp.exp(logits - mx)
-        gates = g / jnp.sum(g, axis=-1, keepdims=True)
-        iota_e = jax.lax.broadcasted_iota(jnp.int32, (B, e_log), 1)
-        remaining = gates
-        wsum = jnp.zeros((B, 1), jnp.float32)
-        for kk in range(top_k):     # k argmax passes; ties -> lowest id,
-            mv = jnp.max(remaining, axis=-1, keepdims=True)  # as lax.top_k
-            sk = jnp.min(jnp.where(remaining >= mv, iota_e, e_log),
-                         axis=-1, keepdims=True)
-            sel_ref[:, kk] = sk[:, 0]
-            wsel_ref[:, kk] = mv[:, 0]
-            wsum = wsum + mv
-            remaining = jnp.where(iota_e == sk, -1.0, remaining)
-        wsel_ref[...] = wsel_ref[...] / jnp.maximum(wsum, 1e-9)
+    # ---- phase P: post-projection + residual, one D-page per step -----
+    @pl.when((t >= p0) & (t < r0))
+    def _project():
+        dp = t - p0
+        o_flat = o_ref[...].astype(x_ref.dtype)           # (B, H*Da)
+        proj = jnp.dot(o_flat, wpost_ref[...],
+                       preferred_element_type=jnp.float32)  # (B, Db)
+        yb = x_ref[...] + proj.astype(y_ref.dtype)
+        y_ref[:, pl.ds(dp * block_d, block_d)] = yb
+        sq = jnp.sum(jnp.square(yb.astype(jnp.float32)), axis=-1,
+                     keepdims=True)
 
-        # per-expert slot tables: the sequential scan is the decode-shaped
-        # sort pre-pass (token order == stable-sort order, so drop
-        # semantics match moe_group_tokens exactly)
-        tok_ref[...] = jnp.zeros_like(tok_ref)
-        wgt_ref[...] = jnp.zeros_like(wgt_ref)
+        @pl.when(dp == 0)
+        def _():
+            ssq_ref[...] = sq
 
-        def _zero(i, _):
-            cnt_ref[i] = 0
-            return 0
-        jax.lax.fori_loop(0, e_local, _zero, 0)
+        @pl.when(dp != 0)
+        def _():
+            ssq_ref[...] += sq
 
-        off = off_ref[0]
+    # ---- phase R: norm + router (paged), then top-k + grouping --------
+    @pl.when((t >= r0) & (t < s0))
+    def _norm_route():
+        dr = t - r0
+        yb = y_ref[:, pl.ds(dr * block_d, block_d)].astype(jnp.float32)
+        rs = jax.lax.rsqrt(ssq_ref[...] / d_model + eps)  # (B, 1)
+        h2b = (yb * rs).astype(h2_ref.dtype) * ln2_ref[...]
+        h2_ref[:, pl.ds(dr * block_d, block_d)] = h2b
+        contrib = jnp.dot(h2b, router_ref[...],
+                          preferred_element_type=jnp.float32)  # (B, E_log)
 
-        def _group(n, _):
-            b = n // top_k
-            kk = n % top_k
-            s = sel_ref[b, kk]
-            w = wsel_ref[b, kk]
-            rc = rcnt_ref[0, s]
-            rep = jax.lax.rem(b + kk, jnp.maximum(rc, 1))
-            ph = l2p_ref[s, rep]
-            e = ph - off
-            ok = (e >= 0) & (e < e_local) & (rc > 0)
-            ec = jnp.clip(e, 0, e_local - 1)
-            c = cnt_ref[ec]
-            ok = ok & (c < cap)
+        @pl.when(dr == 0)
+        def _():
+            lg_ref[...] = contrib
 
-            @pl.when(ok)
+        @pl.when(dr != 0)
+        def _():
+            lg_ref[...] += contrib
+
+        @pl.when(dr == nd - 1)
+        def _route():
+            logits = jnp.where(mask_ref[...] != 0, lg_ref[...], NEG_INF)
+            mx = jnp.max(logits, axis=-1, keepdims=True)
+            g = jnp.exp(logits - mx)
+            gates = g / jnp.sum(g, axis=-1, keepdims=True)
+            iota_e = jax.lax.broadcasted_iota(jnp.int32, (B, e_log), 1)
+            remaining = gates
+            wsum = jnp.zeros((B, 1), jnp.float32)
+            for kk in range(top_k):  # k argmax passes; ties -> lowest id,
+                mv = jnp.max(remaining, axis=-1, keepdims=True)  # as top_k
+                sk = jnp.min(jnp.where(remaining >= mv, iota_e, e_log),
+                             axis=-1, keepdims=True)
+                sel_ref[:, kk] = sk[:, 0]
+                wsel_ref[:, kk] = mv[:, 0]
+                wsum = wsum + mv
+                remaining = jnp.where(iota_e == sk, -1.0, remaining)
+            wsel_ref[...] = wsel_ref[...] / jnp.maximum(wsum, 1e-9)
+
+            # per-expert slot tables: the sequential scan is the decode-
+            # shaped sort pre-pass (token order == stable-sort order, so
+            # drop semantics match moe_group_tokens exactly)
+            tok_ref[...] = jnp.zeros_like(tok_ref)
+            wgt_ref[...] = jnp.zeros_like(wgt_ref)
+
+            def _zero(i, _):
+                cnt_ref[i] = 0
+                return 0
+            jax.lax.fori_loop(0, e_local, _zero, 0)
+
+            off = off_ref[0]
+
+            def _group(n, _):
+                b = n // top_k
+                kk = n % top_k
+                s = sel_ref[b, kk]
+                w = wsel_ref[b, kk]
+                rc = rcnt_ref[0, s]
+                rep = jax.lax.rem(b + kk, jnp.maximum(rc, 1))
+                ph = l2p_ref[s, rep]
+                e = ph - off
+                ok = (e >= 0) & (e < e_local) & (rc > 0)
+                ec = jnp.clip(e, 0, e_local - 1)
+                c = cnt_ref[ec]
+                ok = ok & (c < cap)
+
+                @pl.when(ok)
+                def _():
+                    tok_ref[ec, c] = b
+                    wgt_ref[ec, c] = w
+                    cnt_ref[ec] = c + 1
+
+                return 0
+            jax.lax.fori_loop(0, B * top_k, _group, 0)
+
+    # ---- phase S: shared-expert SwiGLU over h2 (paged weights) --------
+    @pl.when((t >= s0) & (t < m0))
+    def _shared():
+        u = t - s0
+        r = jax.lax.rem(u, 2 * nd)
+        d = jax.lax.rem(r, nd)
+        is_in = r < nd
+
+        @pl.when(is_in)
+        def _contract():
+            h2b = h2_ref[:, pl.ds(d * block_d, block_d)]
+            cg = jnp.dot(h2b, sgate_ref[...],
+                         preferred_element_type=jnp.float32)
+            cu = jnp.dot(h2b, sup_ref[...],
+                         preferred_element_type=jnp.float32)
+
+            @pl.when(d == 0)
             def _():
-                tok_ref[ec, c] = b
-                wgt_ref[ec, c] = w
-                cnt_ref[ec] = c + 1
+                hgs_ref[...] = cg
+                hus_ref[...] = cu
 
-            return 0
-        jax.lax.fori_loop(0, sel_ref.shape[0] * top_k, _group, 0)
+            @pl.when(d != 0)
+            def _():
+                hgs_ref[...] += cg
+                hus_ref[...] += cu
 
-    # ---- phase M: grouped SwiGLU FFN + weighted scatter-combine ----
-    @pl.when(t > attn_steps)
+        @pl.when(jnp.logical_not(is_in))
+        def _emit():
+            @pl.when(d == 0)
+            def _():
+                hgs_ref[...] = jax.nn.silu(hgs_ref[...]) * hus_ref[...]
+
+            contrib = jnp.dot(hgs_ref[...].astype(h2_ref.dtype),
+                              sdown_ref[...],
+                              preferred_element_type=jnp.float32)
+            y_ref[:, pl.ds(d * block_d, block_d)] += contrib.astype(
+                y_ref.dtype)
+
+    # ---- phase M: grouped SwiGLU FFN + weighted scatter-combine -------
+    @pl.when(t >= m0)
     def _moe():
-        u = t - attn_steps - 1
-        e = u // nf
-        f = u % nf
+        u = t - m0
+        per_e = nf * 2 * nd
+        e = u // per_e
+        u2 = jax.lax.rem(u, per_e)
+        r = jax.lax.rem(u2, 2 * nd)
+        d = jax.lax.rem(r, nd)
+        is_in = r < nd
 
-        @pl.when(f == 0)
+        @pl.when(u2 == 0)
         def _gather():
             accm_ref[...] = jnp.zeros_like(accm_ref)
 
@@ -209,16 +302,36 @@ def _megastep_kernel(bt_ref, sl_ref, st_ref, off_ref,
                 return 0
             jax.lax.fori_loop(0, cap, body, 0)
 
-        xg = xs_ref[...]                                  # (cap, D)
-        gw = gate_ref[0]                                  # (D, Fb)
-        uw = up_ref[0]
-        dw = down_ref[0]                                  # (Fb, D)
-        h = jax.nn.silu(jnp.dot(xg, gw, preferred_element_type=jnp.float32))
-        h = h * jnp.dot(xg, uw, preferred_element_type=jnp.float32)
-        accm_ref[...] += jnp.dot(h.astype(xg.dtype), dw,
-                                 preferred_element_type=jnp.float32)
+        @pl.when(is_in)
+        def _contract():
+            xg = xs_ref[:, pl.ds(d * block_d, block_d)]   # (cap, Db)
+            cg = jnp.dot(xg, gate_ref[0],
+                         preferred_element_type=jnp.float32)
+            cu = jnp.dot(xg, up_ref[0],
+                         preferred_element_type=jnp.float32)
 
-        @pl.when(f == nf - 1)
+            @pl.when(d == 0)
+            def _():
+                hg_ref[...] = cg
+                hu_ref[...] = cu
+
+            @pl.when(d != 0)
+            def _():
+                hg_ref[...] += cg
+                hu_ref[...] += cu
+
+        @pl.when(jnp.logical_not(is_in))
+        def _emit():
+            @pl.when(d == 0)
+            def _():
+                hg_ref[...] = jax.nn.silu(hg_ref[...]) * hu_ref[...]
+
+            contrib = jnp.dot(hg_ref[...].astype(xs_ref.dtype),
+                              down_ref[0],
+                              preferred_element_type=jnp.float32)
+            accm_ref[:, pl.ds(d * block_d, block_d)] += contrib
+
+        @pl.when(u2 == per_e - 1)
         def _combine():
             def body(i, _):
                 w = wgt_ref[e, i]
@@ -236,13 +349,20 @@ def _megastep_kernel(bt_ref, sl_ref, st_ref, off_ref,
 def decode_megastep_pallas(q, k_pool, v_pool, block_table, seq_lens,
                            start_lens, x, w_post, ln2_w, router_w, l2p,
                            replica_count, expert_mask, gate_w, up_w,
-                           down_w, expert_offset, *, top_k: int, cap: int,
-                           e_local: int, eps: float = 1e-5,
-                           block_f: int = 256, interpret: bool = False):
+                           down_w, expert_offset, shared_gate=None,
+                           shared_up=None, shared_down=None, *,
+                           top_k: int, cap: int, e_local: int,
+                           eps: float = 1e-5, block_f: int = 256,
+                           block_d: int = 512, interpret: bool = False):
     """One fused attention+MoE decode block step (see module docstring).
 
     Shapes as :func:`repro.kernels.ref.decode_megastep_ref`; returns
-    ``(y (B, D), h2 (B, D))``.
+    ``(y (B, D), h2 (B, D))``.  ``shared_gate``/``shared_up`` (D, Fs)
+    and ``shared_down`` (Fs, D) are the shared-expert SwiGLU weights
+    (None = no shared experts; the phase is statically skipped).  The
+    D axis is tiled into ``block_d`` pages: activations stay VMEM-
+    resident whole, weights stream one (double-buffered) page per grid
+    step.
     """
     B, H, Da = q.shape
     nb, bs, Hkv, _ = k_pool.shape
@@ -262,20 +382,75 @@ def decode_megastep_pallas(q, k_pool, v_pool, block_table, seq_lens,
         down_w = jnp.pad(down_w, ((0, 0), (0, Fp - F), (0, 0)))
     nf = Fp // Fb
 
+    Db = min(block_d, D)
+    Dp = ((D + Db - 1) // Db) * Db
+    nd = Dp // Db
+    if Dp != D:
+        # zero D-padding is norm-/router-/FFN-neutral: padded x/w_post
+        # columns keep y's pad zero (the norm divides by the true D),
+        # padded router/gate/up rows contribute nothing, padded down
+        # columns write nothing
+        pad = Dp - D
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w_post = jnp.pad(w_post, ((0, 0), (0, pad)))
+        ln2_w = jnp.pad(ln2_w, ((0, pad),))
+        router_w = jnp.pad(router_w, ((0, pad), (0, 0)))
+        gate_w = jnp.pad(gate_w, ((0, 0), (0, pad), (0, 0)))
+        up_w = jnp.pad(up_w, ((0, 0), (0, pad), (0, 0)))
+        down_w = jnp.pad(down_w, ((0, 0), (0, 0), (0, pad)))
+
+    if shared_gate is None:
+        ns, Fsb = 0, 8
+        shared_gate = jnp.zeros((Db, Fsb), x.dtype)
+        shared_up = jnp.zeros((Db, Fsb), x.dtype)
+        shared_down = jnp.zeros((Fsb, Db), x.dtype)
+    else:
+        Fs = shared_gate.shape[1]
+        Fsb = min(block_f, Fs)
+        Fsp = ((Fs + Fsb - 1) // Fsb) * Fsb
+        ns = Fsp // Fsb
+        shared_gate = jnp.pad(shared_gate,
+                              ((0, Dp - D), (0, Fsp - Fs)))
+        shared_up = jnp.pad(shared_up, ((0, Dp - D), (0, Fsp - Fs)))
+        shared_down = jnp.pad(shared_down,
+                              ((0, Fsp - Fs), (0, Dp - D)))
+
     attn_steps = B * n_attn
-    grid = (attn_steps + 1 + E * nf,)
+    p0 = attn_steps
+    r0 = p0 + nd
+    s0 = r0 + nd
+    m0 = s0 + ns * 2 * nd
+    grid = (m0 + E * nf * 2 * nd,)
 
     def _ab(t):
         ta = jnp.minimum(t, attn_steps - 1)
         return ta // n_attn, ta % n_attn
 
-    def _ef(t):
-        u = jnp.clip(t - attn_steps - 1, 0, E * nf - 1)
-        return u // nf, u % nf
+    def _dp(t):
+        return jnp.clip(t - p0, 0, nd - 1)
+
+    def _dr(t):
+        return jnp.clip(t - r0, 0, nd - 1)
+
+    def _sfd(t):
+        u = jnp.clip(t - s0, 0, max(ns * 2 * nd - 1, 0))
+        f = u // (2 * nd)
+        r = jax.lax.rem(u, 2 * nd)
+        return f, jax.lax.rem(r, nd)
+
+    def _efd(t):
+        u = jnp.clip(t - m0, 0, E * nf * 2 * nd - 1)
+        per_e = nf * 2 * nd
+        e = u // per_e
+        u2 = jax.lax.rem(u, per_e)
+        f = u2 // (2 * nd)
+        r = jax.lax.rem(u2, 2 * nd)
+        return e, f, jax.lax.rem(r, nd)
 
     kernel = functools.partial(
-        _megastep_kernel, bs=bs, n_attn=n_attn, nf=nf, cap=cap,
-        top_k=top_k, e_local=E, e_log=e_log, scale=scale, eps=eps)
+        _megastep_kernel, bs=bs, n_attn=n_attn, nd=nd, nf=nf, ns=ns,
+        cap=cap, top_k=top_k, e_local=E, e_log=e_log, scale=scale,
+        eps=eps, d_model=D, block_d=Db)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=grid,
@@ -288,33 +463,51 @@ def decode_megastep_pallas(q, k_pool, v_pool, block_table, seq_lens,
             pl.BlockSpec((1, bs, Hkv, Da),
                          lambda t, bt, sl, st, off:
                          (bt[_ab(t)[0], _ab(t)[1]], 0, 0, 0)),
-            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
-            pl.BlockSpec((H * Da, D), lambda t, bt, sl, st, off: (0, 0)),
-            pl.BlockSpec((1, D), lambda t, bt, sl, st, off: (0, 0)),
-            pl.BlockSpec((D, e_log), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((B, Db), lambda t, bt, sl, st, off: (0, _dp(t))),
+            pl.BlockSpec((H * Da, Db),
+                         lambda t, bt, sl, st, off: (0, _dp(t))),
+            pl.BlockSpec((1, Db), lambda t, bt, sl, st, off: (0, _dr(t))),
+            pl.BlockSpec((Db, e_log),
+                         lambda t, bt, sl, st, off: (_dr(t), 0)),
             pl.BlockSpec(l2p.shape, lambda t, bt, sl, st, off: (0, 0)),
             pl.BlockSpec((1, e_log), lambda t, bt, sl, st, off: (0, 0)),
             pl.BlockSpec((1, e_log), lambda t, bt, sl, st, off: (0, 0)),
-            pl.BlockSpec((1, D, Fb),
-                         lambda t, bt, sl, st, off: (*_ef(t)[:1], 0,
-                                                     _ef(t)[1])),
-            pl.BlockSpec((1, D, Fb),
-                         lambda t, bt, sl, st, off: (*_ef(t)[:1], 0,
-                                                     _ef(t)[1])),
-            pl.BlockSpec((1, Fb, D),
-                         lambda t, bt, sl, st, off: (*_ef(t)[:1],
-                                                     _ef(t)[1], 0)),
+            pl.BlockSpec((Db, Fsb),
+                         lambda t, bt, sl, st, off:
+                         (_sfd(t)[1], _sfd(t)[0])),
+            pl.BlockSpec((Db, Fsb),
+                         lambda t, bt, sl, st, off:
+                         (_sfd(t)[1], _sfd(t)[0])),
+            pl.BlockSpec((Fsb, Db),
+                         lambda t, bt, sl, st, off:
+                         (_sfd(t)[0], _sfd(t)[1])),
+            pl.BlockSpec((1, Db, Fb),
+                         lambda t, bt, sl, st, off:
+                         (_efd(t)[0], _efd(t)[2], _efd(t)[1])),
+            pl.BlockSpec((1, Db, Fb),
+                         lambda t, bt, sl, st, off:
+                         (_efd(t)[0], _efd(t)[2], _efd(t)[1])),
+            pl.BlockSpec((1, Fb, Db),
+                         lambda t, bt, sl, st, off:
+                         (_efd(t)[0], _efd(t)[1], _efd(t)[2])),
         ],
         out_specs=[
-            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
-            pl.BlockSpec((B, D), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((B, Dp), lambda t, bt, sl, st, off: (0, 0)),
+            pl.BlockSpec((B, Dp), lambda t, bt, sl, st, off: (0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((H, Da), jnp.float32),    # attention accumulator
             pltpu.VMEM((H, 1), jnp.float32),     # running max
             pltpu.VMEM((H, 1), jnp.float32),     # running denominator
-            pltpu.VMEM((cap, D), x.dtype),       # gathered expert rows
-            pltpu.VMEM((cap, D), jnp.float32),   # FFN accumulator
+            pltpu.VMEM((B, H * Da), jnp.float32),  # attention outputs
+            pltpu.VMEM((B, 1), jnp.float32),     # norm sum of squares
+            pltpu.VMEM((B, e_log), jnp.float32),  # router logit accum
+            pltpu.VMEM((cap, Dp), x.dtype),      # gathered expert rows
+            pltpu.VMEM((cap, Dp), jnp.float32),  # FFN accumulator
+            pltpu.VMEM((cap, Fb), jnp.float32),  # expert gate hidden
+            pltpu.VMEM((cap, Fb), jnp.float32),  # expert up hidden
+            pltpu.VMEM((B, Fsb), jnp.float32),   # shared gate hidden
+            pltpu.VMEM((B, Fsb), jnp.float32),   # shared up hidden
             pltpu.VMEM((B, top_k), jnp.int32),   # selected logical ids
             pltpu.VMEM((B, top_k), jnp.float32),  # renormalized weights
             pltpu.VMEM((E, cap), jnp.int32),     # slot -> token row
@@ -325,16 +518,18 @@ def decode_megastep_pallas(q, k_pool, v_pool, block_table, seq_lens,
     y, h2 = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((B, D), x.dtype),
-                   jax.ShapeDtypeStruct((B, D), x.dtype)],
+        out_shape=[jax.ShapeDtypeStruct((B, Dp), x.dtype),
+                   jax.ShapeDtypeStruct((B, Dp), x.dtype)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
       start_lens.astype(jnp.int32),
       jnp.asarray(expert_offset, jnp.int32).reshape(1),
-      q, k_pool, v_pool, x, w_post, ln2_w.reshape(1, D), router_w,
+      q, k_pool, v_pool, x, w_post, ln2_w.reshape(1, Dp), router_w,
       l2p.astype(jnp.int32), replica_count.astype(jnp.int32).reshape(
           1, e_log), expert_mask.astype(jnp.int32).reshape(1, e_log),
-      gate_w, up_w, down_w)
+      shared_gate, shared_up, shared_down, gate_w, up_w, down_w)
+    if Dp != D:
+        y, h2 = y[:, :D], h2[:, :D]
     return y, h2

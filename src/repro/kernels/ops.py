@@ -79,31 +79,37 @@ def paged_attention(q, k_pool, v_pool, block_table, seq_lens,
                                     "use_pallas"))
 def decode_megastep(q, k_pool, v_pool, block_table, seq_lens, start_lens,
                     x, w_post, ln2_w, router_w, l2p, replica_count,
-                    expert_mask, gate_w, up_w, down_w, expert_offset, *,
+                    expert_mask, gate_w, up_w, down_w, expert_offset,
+                    shared_gate=None, shared_up=None, shared_down=None, *,
                     top_k: int, cap: int, e_local: int, eps: float = 1e-5,
                     use_pallas: bool = True):
-    """One fused attention+MoE decode block step (ISSUE 5 tentpole).
+    """One fused attention+MoE decode block step (ISSUE 5 tentpole,
+    D-blocked + shared experts in ISSUE 8).
 
     Paged attention -> output projection -> residual -> norm -> router
-    top-k -> replica select -> grouped expert FFN -> combine -> residual
-    in one kernel launch (Pallas on TPU; jnp oracle on CPU).  The block
-    table / seq_lens / start_lens paging arrays, ``expert_offset`` and
-    the MoERuntime arrays are all *traced data*, so continuous batching,
-    revive, migration and expert masking never retrigger compilation.
-    Returns ``(y, h2)`` — shared experts (if any) are applied by the
-    caller over ``h2``.
+    top-k -> replica select -> grouped expert FFN (+ shared-expert FFN)
+    -> combine -> residual in one kernel launch (Pallas on TPU; jnp
+    oracle on CPU).  Weight matrices stream through VMEM in ``d_model``
+    pages, so deployment hidden sizes fit.  The block table / seq_lens /
+    start_lens paging arrays, ``expert_offset`` and the MoERuntime
+    arrays are all *traced data*, so continuous batching, revive,
+    migration and expert masking never retrigger compilation.
+    shared_gate/shared_up/shared_down are the shared-expert SwiGLU
+    weights or None (no shared experts — the phase is statically
+    elided).  Returns ``(y, h2)``.
     """
     if not use_pallas:
         return ref.decode_megastep_ref(
             q, k_pool, v_pool, block_table, seq_lens, start_lens, x,
             w_post, ln2_w, router_w, l2p, replica_count, expert_mask,
-            gate_w, up_w, down_w, expert_offset, top_k=top_k, cap=cap,
-            e_local=e_local, eps=eps)
+            gate_w, up_w, down_w, expert_offset, shared_gate, shared_up,
+            shared_down, top_k=top_k, cap=cap, e_local=e_local, eps=eps)
     return decode_megastep_pallas(
         q, k_pool, v_pool, block_table, seq_lens, start_lens, x, w_post,
         ln2_w, router_w, l2p, replica_count, expert_mask, gate_w, up_w,
-        down_w, expert_offset, top_k=top_k, cap=cap, e_local=e_local,
-        eps=eps, interpret=_on_cpu())
+        down_w, expert_offset, shared_gate, shared_up, shared_down,
+        top_k=top_k, cap=cap, e_local=e_local, eps=eps,
+        interpret=_on_cpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

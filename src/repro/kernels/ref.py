@@ -102,11 +102,13 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
 def decode_megastep_ref(q, k_pool, v_pool, block_table, seq_lens,
                         start_lens, x, w_post, ln2_w, router_w, l2p,
                         replica_count, expert_mask, gate_w, up_w, down_w,
-                        expert_offset, *, top_k: int, cap: int,
+                        expert_offset, shared_gate=None, shared_up=None,
+                        shared_down=None, *, top_k: int, cap: int,
                         e_local: int, eps: float = 1e-5):
     """Fused decode-step oracle: paged attention -> output projection ->
     residual -> RMS norm -> router top-k -> replica select -> fused MoE
-    dispatch/FFN/combine -> residual, for one attention+MoE block.
+    dispatch/FFN/combine (+ shared-expert SwiGLU) -> residual, for one
+    attention+MoE block.
 
     q: (B, H, Da) roped/pre-scaled query (for MLA, Da = R + dr and q is
     the latent query the composed path feeds ``paged_attention``);
@@ -117,9 +119,11 @@ def decode_megastep_ref(q, k_pool, v_pool, block_table, seq_lens,
     wuv·wo with zero rows for the rope columns); l2p (E_log,
     MAX_REPLICAS) / replica_count (E_log,) / expert_mask (E_log,) are
     the MoERuntime arrays — pure data, so recovery mutations never
-    recompile.  Returns ``(y, h2)``: the block output (shared experts
-    excluded — callers apply them over ``h2``, the normed post-attention
-    activations, exactly as the composed path does).
+    recompile.  shared_gate/shared_up (D, Fs) and shared_down (Fs, D)
+    are the shared-expert SwiGLU weights; None means the config has no
+    shared experts.  Returns ``(y, h2)``: the block output (shared
+    experts applied over ``h2``, the normed post-attention activations,
+    exactly as the composed path does).
     """
     B = q.shape[0]
     o = paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens,
@@ -142,7 +146,12 @@ def decode_megastep_ref(q, k_pool, v_pool, block_table, seq_lens,
     y_moe = moe_fused_ref(h2, gate_w, up_w, down_w, w,
                           phys.astype(jnp.int32), alive, cap=cap,
                           expert_offset=expert_offset, e_local=e_local)
-    return x2 + y_moe, h2
+    y = x2 + y_moe
+    if shared_gate is not None:
+        # same expression as ffn.ffn_apply("swiglu") over h2
+        hs = jax.nn.silu(h2 @ shared_gate) * (h2 @ shared_up)
+        y = y + hs @ shared_down
+    return y, h2
 
 
 def ssm_scan_ref(u, dt, A, B_ssm, C_ssm, h0=None):

@@ -632,8 +632,9 @@ class Model:
 
     def _block_decode_megastep(self, p, x, csl, page, runtime, cap):
         """One attention+MoE block through ``ops.decode_megastep``: the
-        whole attention -> residual -> norm -> route -> expert FFN ->
-        combine chain is a single kernel launch (jnp oracle on CPU).
+        whole attention -> residual -> norm -> route -> expert FFN
+        (routed + shared) -> combine chain is a single kernel launch
+        (jnp oracle on CPU).
         QKV projection + rope + the pool token write stay outside — they
         are one fused GEMM/scatter shared with the composed path, and
         keeping the write in XLA keeps the §3.3 row-level undo manifest
@@ -659,15 +660,19 @@ class Model:
         if starts is None:
             starts = jnp.zeros_like(page["seq_lens"])
         moe_p = p["moe"]
-        y, h2 = ops.decode_megastep(
+        shared = moe_p.get("shared")
+        y, _ = ops.decode_megastep(
             q, k_pool, v_pool, page["tables"], page["seq_lens"], starts,
             x, w_post, p["ln2"], moe_p["router"],
             runtime.logical_to_physical, runtime.replica_count,
             runtime.expert_mask, moe_p["gate"], moe_p["up"],
-            moe_p["down"], jnp.int32(0), top_k=cfg.moe.top_k, cap=cap,
+            moe_p["down"], jnp.int32(0),
+            shared["w_gate"] if shared else None,
+            shared["w_up"] if shared else None,
+            shared["w_down"] if shared else None,
+            top_k=cfg.moe.top_k, cap=cap,
             e_local=MoE.physical_experts(cfg.moe), eps=cfg.norm_eps,
             use_pallas=use_pallas)
-        y = y + MoE.shared_expert_apply(moe_p, cfg, h2)
         return y, entry, 0.0
 
     def _period_decode_paged(self, p, x, csl, page, runtime, cap):

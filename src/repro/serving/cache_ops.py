@@ -209,6 +209,26 @@ def restore_pool_rows(cache, axes_leaves: List[Optional[int]], undo):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_pool_rows_subset(cache, axes_leaves: List[Optional[int]],
+                             undo, idx):
+    """Scatter back only the captured rows selected by ``idx`` (indices
+    into the undo payload's row axis) — the rejected-draft half of a
+    speculation window rolls back while the rest of the step's writes
+    stand.  State leaves are untouched: speculative decode only runs on
+    attention-only models, whose chunk steps write pools exclusively."""
+    idxa = jnp.asarray(idx, jnp.int32)
+    bids = undo["bids"][idxa]
+    offs = undo["offs"][idxa]
+    c_leaves, treedef = jax.tree_util.tree_flatten(cache)
+    out = []
+    for c, ax, row in zip(c_leaves, axes_leaves, undo["rows"]):
+        if ax is None:
+            out.append(c.at[:, bids, offs].set(row[:, idxa]))
+        else:
+            out.append(c)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def scatter_request_blocks(cache, axes_leaves: List[Optional[int]],
                            pool_blocks, state, block_ids, slot: int):
     """Inverse of :func:`gather_request_blocks` on the *target* cache:

@@ -157,6 +157,13 @@ class EngineConfig:
     # step's captured write set (donation-friendly); 'snapshot' keeps
     # the legacy O(1) functional reference to the whole cache
     pool_undo: str = "rows"
+    # multi-token self-speculative decode: > 1 lets decode-ready
+    # requests verify up to this many tokens per step through the
+    # compiled chunk graph (n-gram self-drafts, deterministic
+    # accept/reject — output stays token-identical to plain decode).
+    # 0/1 disables; chunked admission only (recurrent-prefill models
+    # fall back to plain decode automatically)
+    spec_window: int = 0
 
     def __post_init__(self):
         # ValueError (not assert) so misconfiguration still fails loudly
@@ -212,6 +219,15 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.pool_undo must be 'rows' or 'snapshot', "
                 f"got {self.pool_undo!r}")
+        if not isinstance(self.spec_window, int) or self.spec_window < 0:
+            raise ValueError(
+                f"EngineConfig.spec_window must be a non-negative int, "
+                f"got {self.spec_window!r}")
+        if self.spec_window > self.prefill_chunk:
+            raise ValueError(
+                f"EngineConfig.spec_window ({self.spec_window}) cannot "
+                f"exceed prefill_chunk ({self.prefill_chunk}) — verify "
+                f"windows ride the chunk graph")
 
 
 @dataclass
@@ -390,7 +406,8 @@ class InferenceEngine:
                           if ec.token_budget is not None
                           else ec.max_batch + ec.prefill_chunk),
             prefix_cache=ec.prefix_cache,
-            pool_undo=ec.pool_undo)
+            pool_undo=ec.pool_undo,
+            spec_window=ec.spec_window)
 
     @property
     def _next_version(self) -> int:
@@ -428,6 +445,17 @@ class InferenceEngine:
             return (self._cache_specs(), raw_specs, bids, slot)
         return (p_specs, toks, lens, r_specs)
 
+    def _donate(self, phase: str) -> tuple:
+        """Donate the KV pool (cache, arg 1) into the compiled decode and
+        chunk steps so the token writes happen in place (carry-over (h)).
+        Safe only under row-level undo: ``plan()`` captures the step's
+        write-set rows *before* compute, so rollback never needs the
+        pre-step buffers.  The legacy 'snapshot' strategy keeps a live
+        reference to them and must not donate."""
+        if phase in ("decode", "chunk") and self.ecfg.pool_undo == "rows":
+            return (1,)
+        return ()
+
     def _compile_initial(self, t: Dict[str, float]) -> None:
         v = self.domain.version
         phases = [("decode", _decode_closure(self.model, v))]
@@ -437,7 +465,8 @@ class InferenceEngine:
             key = (phase, v, None)
             if key not in self.graph_cache:
                 _, tm = self.graph_cache.get_or_compile(
-                    key, fn, self._arg_specs(phase))
+                    key, fn, self._arg_specs(phase),
+                    donate_argnums=self._donate(phase))
                 t["read_cache"] = t.get("read_cache", 0.0) + tm.read_cache_s
                 t["compile"] = t.get("compile", 0.0) + tm.compile_s
             else:
@@ -450,13 +479,15 @@ class InferenceEngine:
         v = self.domain.version + 1
         self.graph_cache.precompile(
             ("decode", v, None), _decode_closure(self.model, v),
-            self._arg_specs("decode"))
+            self._arg_specs("decode"),
+            donate_argnums=self._donate("decode"))
         if self._chunking:
             # chunked admission re-prefills migrated/rolled-back requests
             # through the chunk graph — it must be ready post-failure
             self.graph_cache.precompile(
                 ("chunk", v, None), _chunk_closure(self.model, v),
-                self._arg_specs("chunk"))
+                self._arg_specs("chunk"),
+                donate_argnums=self._donate("chunk"))
             return
         # whole-prefill path: the most common prefill bucket is needed
         # right after migration
@@ -494,7 +525,8 @@ class InferenceEngine:
         else:
             fn = _prefill_closure(self.model, v, self.ecfg.max_seq)
         compiled, _ = self.graph_cache.get_or_compile(
-            key, fn, self._arg_specs(phase, bucket))
+            key, fn, self._arg_specs(phase, bucket),
+            donate_argnums=self._donate(phase))
         return compiled
 
     # -- request API ----------------------------------------------------------------
@@ -690,6 +722,16 @@ class InferenceEngine:
             out["prefix_cache_evictions"] = (
                 out.get("prefix_cache_evictions", 0)
                 + ex.block_manager.cache_evictions)
+        return out
+
+    def spec_histogram(self) -> Dict[int, int]:
+        """Speculation-window width histogram ({planned rows: count})
+        aggregated across attention ranks — the spec-efficiency surface
+        the benchmarks record next to accepted tokens/step."""
+        out: Dict[int, int] = {}
+        for ex in self.dp_executors:
+            for g, n in ex.scheduler.spec_hist.items():
+                out[g] = out.get(g, 0) + n
         return out
 
     # -- main loop --------------------------------------------------------------------

@@ -32,11 +32,12 @@ from repro.serving.cache_ops import (capture_pool_rows,
                                      copy_block_prefixes,
                                      gather_request_blocks,
                                      infer_paged_axes, restore_pool_rows,
+                                     restore_pool_rows_subset,
                                      scatter_request_blocks)
 from repro.serving.kvcache import (build_chunk_context, build_page_context,
                                    max_blocks_per_seq, padded_block_ids)
 from repro.serving.request import Request, RequestState
-from repro.serving.sampling import SamplingParams, sample
+from repro.serving.sampling import SamplingParams, sample, spec_verify
 from repro.serving.scheduler import LocalScheduler, StepPlan
 
 
@@ -80,7 +81,8 @@ class DPExecutor:
                  prefill_chunk: int = 32,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = True,
-                 pool_undo: str = "rows"):
+                 pool_undo: str = "rows",
+                 spec_window: int = 0):
         self.physical_id = physical_id
         self.dp_rank = dp_rank
         self.model = model
@@ -112,7 +114,8 @@ class DPExecutor:
             chunk_tokens=chunk,
             prefix_cache=prefix_cache and chunk > 0,
             window=model.cfg.sliding_window or None,
-            max_prefills=1 if admission == "serial" else None)
+            max_prefills=1 if admission == "serial" else None,
+            spec_window=spec_window)
         self.cache = model.init_paged_cache(max_batch, num_blocks,
                                             block_size)
         if paged_axes is None:   # the engine passes its shared copy in
@@ -223,9 +226,12 @@ class DPExecutor:
                 row_off[req.batch_slot] = wp % bs
             bids += row_bid
             offs += row_off
-        if plan.chunks:
+        if plan.chunks or plan.spec:
+            # speculation windows ride the same launch right after the
+            # prefill pieces; their manifest rows are what the verify
+            # phase partially restores for rejected drafts
             n = 0
-            for piece in plan.chunks:
+            for piece in plan.chunks + plan.spec:
                 blocks = tables[piece.req.req_id].blocks
                 for j in range(piece.length):
                     pos = piece.start + j
@@ -259,9 +265,9 @@ class DPExecutor:
         finished: List[Request] = []
         params, runtime = ctx.params, ctx.runtime
 
-        if plan.chunks:
+        if plan.chunks or plan.spec:
             tokens, page = build_chunk_context(
-                plan.chunks, self.scheduler.block_tables,
+                plan.chunks + plan.spec, self.scheduler.block_tables,
                 width=self.chunk_tokens, max_blk=self.max_blk,
                 block_size=self.block_size, trash_block=self.trash_block)
             logits, self.cache = ctx.chunk_fn()(
@@ -289,6 +295,8 @@ class DPExecutor:
                         req.finish_time = time.monotonic()
                         finished.append(req)
                 row += piece.length
+            if plan.spec:
+                finished.extend(self._verify_spec(plan, logits, row))
 
         for req in plan.prefills:
             toks = req.tokens_so_far
@@ -340,11 +348,67 @@ class DPExecutor:
                 req.output_tokens.append(tok)
                 req.note_token()
                 self.last_token[req.batch_slot] = tok
+                # decode-grown blocks publish in the prefix cache as
+                # they fill (carry-over (f)) — register before a
+                # possible finish so the blocks park cache-addressable
+                self.scheduler.note_decode_progress(req, self.block_log)
                 if req.done or req.num_tokens >= self.max_seq:
                     self.scheduler.finish(req, self.block_log)
                     req.finish_time = time.monotonic()
                     finished.append(req)
         self.steps_done += 1
+        return finished
+
+    def _verify_spec(self, plan: StepPlan, logits: np.ndarray,
+                     row0: int) -> List[Request]:
+        """Commit each speculation window against the verifier logits.
+
+        Window rows sit after the prefill-chunk rows in both the launch
+        (logits rows) and the plan-time write manifest, in the same
+        order — so a window's manifest indices are its logits rows
+        shifted by the decode section.  Every emitted token is the
+        seeded sampler's output at its own sequence position
+        (``spec_verify``), keeping the stream token-identical to plain
+        decode; pool rows written by rejected drafts are restored
+        bit-exact from the §3.3 write-set capture (under the legacy
+        snapshot strategy they are left stale, which is safe: a stale
+        row's position is only ever attended after its true token's
+        decode step rewrites it)."""
+        finished: List[Request] = []
+        undo = self.block_log.peek_pool_undo()
+        base_manifest = self.max_batch if plan.decode else 0
+        row = row0
+        for win in plan.spec:
+            req = win.req
+            g = win.length
+            base = req.num_tokens          # next position to commit
+            drafts = win.tokens[base:]     # the g - 1 proposals
+            toks, accepted = spec_verify(
+                logits[row:row + g], drafts, self.sampling,
+                start_step=base)
+            emitted = 0
+            for tok in toks:
+                req.output_tokens.append(int(tok))
+                req.note_token()
+                self.last_token[req.batch_slot] = int(tok)
+                emitted += 1
+                if req.done or req.num_tokens >= self.max_seq:
+                    break
+            # window row r wrote the KV row of position base - 1 + r;
+            # rows [emitted, g) hold drafts that were rejected (or never
+            # reached) — scatter their pre-step rows back
+            if emitted < g and undo is not None:
+                idx = np.arange(base_manifest + row + emitted,
+                                base_manifest + row + g, dtype=np.int32)
+                self.cache = restore_pool_rows_subset(
+                    self.cache, self.paged_axes, undo, idx)
+            self.scheduler.note_spec_done(win, emitted, accepted)
+            self.scheduler.note_decode_progress(req, self.block_log)
+            if req.done or req.num_tokens >= self.max_seq:
+                self.scheduler.finish(req, self.block_log)
+                req.finish_time = time.monotonic()
+                finished.append(req)
+            row += g
         return finished
 
     def commit(self) -> None:

@@ -51,3 +51,33 @@ def sample(logits: np.ndarray, params: SamplingParams,
     idx = np.minimum((cdf < u[:, None]).sum(axis=-1), logits.shape[-1] - 1)
     return np.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
         np.int32)
+
+
+def spec_verify(logits: np.ndarray, drafts, params: SamplingParams, *,
+                start_step: int):
+    """Deterministic accept/reject for self-speculative decode.
+
+    ``logits`` (g, V) are the verifier's outputs for one speculation
+    window: row r holds the logits for sequence position
+    ``start_step + r`` (row 0 re-forwarded the last committed token;
+    rows 1..g-1 forwarded ``drafts``).  Each row is sampled with the
+    *same* seeded sampler a non-speculative decode step would use at
+    that position, and a draft is accepted iff it equals the sampled
+    target exactly — so the emitted stream is token-identical to plain
+    decode, whatever the temperature.  Rows past the first mismatch
+    conditioned on rejected drafts and are discarded.
+
+    Returns ``(tokens, accepted)``: the emitted token ids (1 + accepted
+    drafts; the final entry is the verifier's "bonus" token, fresh for
+    the first rejected position or appended after a fully-accepted
+    window) and the number of drafts accepted.
+    """
+    g = logits.shape[0]
+    steps = start_step + np.arange(g, dtype=np.int64)
+    targets = sample(logits, params, step=steps)
+    accepted = 0
+    for d in drafts:
+        if accepted >= g - 1 or int(targets[accepted]) != int(d):
+            break
+        accepted += 1
+    return targets[:accepted + 1], accepted

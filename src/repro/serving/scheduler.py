@@ -23,13 +23,37 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.block_log import (ROOT_DIGEST, BlockLog, BlockManager,
-                                  BlockTable, prompt_digests)
+                                  BlockTable, block_digest, prompt_digests)
 from repro.serving.request import Request, RequestState
+
+
+def ngram_propose(tokens, max_draft: int, n: int = 2) -> Tuple[int, ...]:
+    """Self-draft proposer (prompt-lookup decoding): find the most recent
+    *earlier* occurrence of the sequence's final ``n``-gram and propose
+    the tokens that followed it.  Free (no model call, no extra state)
+    and strong exactly where speculation pays — repetitive continuations
+    (code, templated text, multi-turn echoes).  Returns () when the
+    sequence is too short or the n-gram never recurred; the request then
+    decodes one token as usual."""
+    t = list(tokens)
+    if max_draft < 1 or len(t) < n + 1:
+        return ()
+    key = t[-n:]
+    for i in range(len(t) - n - 1, -1, -1):
+        if t[i:i + n] == key:
+            return tuple(t[i + n:i + n + max_draft])
+    return ()
 
 
 @dataclass
 class ChunkPiece:
-    """One request's slice of this step's batched prefill chunk."""
+    """One request's slice of this step's batched prefill chunk.
+
+    Speculation windows (``StepPlan.spec``) reuse this shape: ``start``
+    is the last committed token's position (its KV row is unwritten —
+    row 0 of the window re-forwards it), ``tokens`` is the committed
+    sequence plus the proposed drafts, and ``length`` is the full
+    verify width (1 + drafts)."""
     req: Request
     start: int                 # first position computed this step
     length: int                # tokens computed this step
@@ -42,6 +66,9 @@ class StepPlan:
     chunks: List[ChunkPiece] = field(default_factory=list)
     prefills: List[Request] = field(default_factory=list)  # whole-prompt
     decode: List[Request] = field(default_factory=list)
+    # self-speculative verify windows: decode-ready requests whose next
+    # few tokens ride the chunk graph as virtual decode slots
+    spec: List[ChunkPiece] = field(default_factory=list)
     # (src_bid, dst_bid, n_tokens) device copies for prefix-cache COW
     cow_copies: List[Tuple[int, int, int]] = field(default_factory=list)
 
@@ -52,7 +79,8 @@ class StepPlan:
 
     @property
     def empty(self) -> bool:
-        return not (self.chunks or self.prefills or self.decode)
+        return not (self.chunks or self.prefills or self.decode
+                    or self.spec)
 
 
 @dataclass
@@ -74,14 +102,18 @@ class LocalScheduler:
                  chunk_tokens: int = 0,
                  prefix_cache: bool = False,
                  window: Optional[int] = None,
-                 max_prefills: Optional[int] = None):
+                 max_prefills: Optional[int] = None,
+                 spec_window: int = 0):
         """``token_budget``: per-step decode+prefill token target (None =
         unbounded).  ``chunk_tokens`` > 0 enables chunked prefill with
         that batched-chunk width; 0 selects whole-prompt prefills.
         ``prefix_cache`` turns on content-hash block reuse (chunked path
         only).  ``window`` frees blocks the sliding attention window has
         passed.  ``max_prefills`` caps whole-prompt admissions per step
-        (1 = the legacy one-prefill-per-step engine)."""
+        (1 = the legacy one-prefill-per-step engine).  ``spec_window``
+        > 1 plans self-speculative verify windows of up to that many
+        tokens for decode-ready requests (needs the chunked path — the
+        windows ride the compiled chunk graph)."""
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.block_manager = block_manager
@@ -90,6 +122,9 @@ class LocalScheduler:
         self.prefix_cache = prefix_cache and chunk_tokens > 0
         self.window = window
         self.max_prefills = max_prefills
+        self.spec_window = spec_window if chunk_tokens > 0 else 0
+        # speculation-window width histogram {planned rows: count}
+        self.spec_hist: Dict[int, int] = {}
         self.waiting: deque[Request] = deque()
         self.running: List[Request] = []
         self.block_tables: Dict[int, BlockTable] = {}
@@ -99,7 +134,11 @@ class LocalScheduler:
         self.stats = {"prefill_tokens_computed": 0,
                       "prefill_tokens_cached": 0,
                       "prefill_chunks": 0,
-                      "blocks_window_freed": 0}
+                      "blocks_window_freed": 0,
+                      "spec_windows": 0,
+                      "spec_drafts": 0,
+                      "spec_accepted": 0,
+                      "spec_emitted": 0}
 
     # -- queue management -----------------------------------------------------
 
@@ -160,10 +199,21 @@ class LocalScheduler:
 
     def register_imported(self, req: Request) -> None:
         """Adopt a KV-block-streamed request (import path): its prefix is
-        fully installed, so it decodes on the next step."""
+        fully installed, so it decodes on the next step.  Its installed
+        blocks register in the prefix cache immediately (carry-over (f))
+        — a migrated conversation's prefix is shareable on the target
+        from the moment it lands.  Import runs at a step boundary, so
+        the registrations commit unlogged."""
         toks = tuple(req.tokens_so_far)
         req.prefill_pos = len(toks)
-        self._seq[req.req_id] = _SeqInfo(tokens=toks, target=len(toks))
+        info = _SeqInfo(tokens=toks, target=len(toks))
+        self._seq[req.req_id] = info
+        if self.prefix_cache:
+            info.digests = prompt_digests(
+                toks, self.block_manager.block_size)
+            # KV rows exist for positions [0, num_tokens - 1): exactly
+            # the full blocks below that bound are publishable
+            self._register_upto(req, info, req.num_tokens - 1, None)
 
     def check_consistent(self) -> None:
         """Invariant check used by tests and cross-instance migration:
@@ -217,7 +267,11 @@ class LocalScheduler:
         budget = (self.token_budget if self.token_budget is not None
                   else float("inf"))
         # 1. ongoing decodes first: a growing sequence may need a new
-        #    block; sequences the window moved past release old ones
+        #    block; sequences the window moved past release old ones.
+        #    With speculation on, a decode-ready request whose n-gram
+        #    proposer has drafts becomes a verify window on the chunk
+        #    graph instead (it shares the chunk width with prefills)
+        spec_room = self.chunk_tokens
         for req in self.running:
             if req.done or self.prefilling(req):
                 continue
@@ -227,6 +281,11 @@ class LocalScheduler:
             # BEFORE growing — at pool exhaustion the request's own dead
             # blocks must be able to feed its next allocation
             self._release_out_of_window(req, pos, log)
+            g = self._plan_spec(plan, req, pos, spec_room, log)
+            if g:
+                spec_room -= g
+                budget -= g
+                continue
             table = self.block_tables[req.req_id]
             if self._blocks_needed(pos + 1) > table.num_blocks():
                 bid = self.block_manager.allocate(log)
@@ -235,7 +294,7 @@ class LocalScheduler:
         budget -= len(plan.decode)
 
         # 2. continue in-flight chunked prefills (admission order)
-        room = self.chunk_tokens
+        room = spec_room
         for req in self.running:
             if room <= 0 or budget <= 0:
                 break
@@ -283,6 +342,46 @@ class LocalScheduler:
                 plan.prefills.append(req)
                 budget -= cost
         return plan
+
+    def _plan_spec(self, plan: StepPlan, req: Request, pos: int,
+                   room: int, log: BlockLog) -> int:
+        """Plan a self-speculative verify window for a decode-ready
+        request.  The window is a chunk piece over ``g`` virtual decode
+        slots — row 0 re-forwards the last committed token (position
+        ``pos - 1``, whose KV row this step writes anyway), rows 1..g-1
+        forward the n-gram drafts — so it reuses the compiled chunk
+        graph verbatim.  The block table grows to cover every window
+        write position; pool pressure shrinks the window (a width-1
+        window is just a decode and falls back to the decode batch).
+        Returns the verify rows planned (0 = plain decode)."""
+        if self.spec_window <= 1 or room <= 1:
+            return 0
+        limit = min(self.spec_window, room,
+                    req.max_new_tokens - len(req.output_tokens),
+                    self.max_seq - pos + 1)
+        if limit <= 1:
+            return 0
+        drafts = ngram_propose(req.tokens_so_far, limit - 1)
+        if not drafts:
+            return 0
+        g = 1 + len(drafts)
+        # cover write positions pos - 1 .. pos + g - 2
+        table = self.block_tables[req.req_id]
+        bs = self.block_manager.block_size
+        grow = self._blocks_needed(pos + g - 1) - table.num_blocks()
+        if grow > 0:
+            grow = min(grow, self.block_manager.num_allocatable)
+            for _ in range(grow):
+                table.append_block(self.block_manager.allocate(log), log)
+            g = min(g, table.num_blocks() * bs - pos + 1)
+        if g <= 1:
+            return 0
+        toks = tuple(req.tokens_so_far) + drafts[:g - 1]
+        plan.spec.append(ChunkPiece(req, pos - 1, g, toks, last=False))
+        self.stats["spec_windows"] += 1
+        self.stats["spec_drafts"] += g - 1
+        self.spec_hist[g] = self.spec_hist.get(g, 0) + 1
+        return g
 
     # -- admission internals -----------------------------------------------------
 
@@ -496,6 +595,41 @@ class LocalScheduler:
 
     def note_prefill_done(self, n_tokens: int) -> None:
         self.stats["prefill_tokens_computed"] += n_tokens
+
+    def note_decode_progress(self, req: Request,
+                             log: Optional[BlockLog] = None) -> None:
+        """Carry-over (f): publish *decode-grown* blocks in the prefix
+        cache.  Called after decode/speculation tokens commit: KV rows
+        exist for positions [0, num_tokens - 1) (the newest token's row
+        is written by its next forward), so every full block below that
+        bound is registrable — a multi-turn follow-up whose prompt
+        embeds this conversation then hits the cache past the original
+        prompt, not just up to it."""
+        if not self.prefix_cache:
+            return
+        info = self._seq.get(req.req_id)
+        if info is None:
+            return
+        bs = self.block_manager.block_size
+        kv_complete = req.num_tokens - 1
+        full = kv_complete // bs
+        if len(info.digests) < full:
+            toks = tuple(req.tokens_so_far)
+            info.tokens = toks   # registration reads block token slices
+            while len(info.digests) < full:
+                b = len(info.digests)
+                parent = info.digests[b - 1] if b else ROOT_DIGEST
+                info.digests.append(
+                    block_digest(parent, toks[b * bs:(b + 1) * bs]))
+        self._register_upto(req, info, kv_complete, log)
+
+    def note_spec_done(self, piece: ChunkPiece, emitted: int,
+                       accepted: int) -> None:
+        """Compute-phase bookkeeping for one verified speculation
+        window: ``emitted`` tokens committed (>= 1), ``accepted`` of the
+        window's drafts matched the verifier."""
+        self.stats["spec_accepted"] += accepted
+        self.stats["spec_emitted"] += emitted
 
     # -- completion -------------------------------------------------------------------
 

@@ -26,9 +26,9 @@ KEY = jax.random.PRNGKey(7)
 # -- Pallas kernel vs jnp oracle (interpret mode) ---------------------------
 
 def _megastep_inputs(*, B=3, H=4, Hkv=2, Dh=16, bs=4, nb=10, max_blk=3,
-                     D=32, E_log=5, E=7, K=2, F=48, cap=5, seed=0,
+                     D=32, E_log=5, E=7, K=2, F=48, Fs=0, cap=5, seed=0,
                      lost=None, masked=None, window=False, offset=0):
-    ks = jax.random.split(jax.random.fold_in(KEY, seed), 11)
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 14)
     q = jax.random.normal(ks[0], (B, H, Dh)) * 0.3
     k_pool = jax.random.normal(ks[1], (nb, bs, Hkv, Dh)) * 0.3
     v_pool = jax.random.normal(ks[2], (nb, bs, Hkv, Dh)) * 0.3
@@ -54,8 +54,14 @@ def _megastep_inputs(*, B=3, H=4, Hkv=2, Dh=16, bs=4, nb=10, max_blk=3,
     g = jax.random.normal(ks[8], (E, D, F)) * 0.05
     u = jax.random.normal(ks[9], (E, D, F)) * 0.05
     d = jax.random.normal(ks[10], (E, F, D)) * 0.05
+    if Fs:
+        sg = jax.random.normal(ks[11], (D, Fs)) * 0.05
+        su = jax.random.normal(ks[12], (D, Fs)) * 0.05
+        sd = jax.random.normal(ks[13], (Fs, D)) * 0.05
+    else:
+        sg = su = sd = None
     args = (q, k_pool, v_pool, bt, sl, st, x, w_post, ln2, router, l2p,
-            rcnt, mask, g, u, d, jnp.int32(offset))
+            rcnt, mask, g, u, d, jnp.int32(offset), sg, su, sd)
     return args, dict(top_k=K, cap=cap, e_local=E)
 
 
@@ -66,15 +72,41 @@ def _megastep_inputs(*, B=3, H=4, Hkv=2, Dh=16, bs=4, nb=10, max_blk=3,
     dict(lost=3, masked=4),                      # §3.4 recovery mutations
     dict(E=3, offset=2, E_log=6),                # EP shard slice
     dict(F=96, cap=3),                           # F blocking + tight cap
+    dict(Fs=40),                                 # in-kernel shared experts
 ], ids=["gqa", "mla_shaped", "windowed", "lost_masked", "ep_offset",
-        "fblocked"])
+        "fblocked", "shared"])
 def test_megastep_kernel_matches_ref(case):
     from repro.kernels import ref
     from repro.kernels.decode_megakernel import decode_megastep_pallas
     args, kw = _megastep_inputs(**case)
     y_ref, h2_ref = ref.decode_megastep_ref(*args, **kw)
+    # block_d=24 < D=32: every variant runs the blocked+padded D path
     y_pal, h2_pal = decode_megastep_pallas(*args, **kw, block_f=32,
-                                           interpret=True)
+                                           block_d=24, interpret=True)
+    np.testing.assert_allclose(np.asarray(h2_pal), np.asarray(h2_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", [
+    dict(),                                      # plain
+    dict(lost=2, masked=3),                      # recovery mutations
+    dict(window=True),                           # sliding-window starts
+], ids=["plain", "lost_masked", "windowed"])
+def test_megastep_kernel_deployment_d_model(case):
+    """Blocked-D parity at a deepseek_v3-class hidden size: weight
+    matrices stream through (block_d)-wide VMEM pages while the (B, D)
+    activations stay resident, so d_model = 7168 runs without a weight
+    ever needing its full D extent on chip (carry-overs (a)/(d))."""
+    from repro.kernels import ref
+    from repro.kernels.decode_megakernel import decode_megastep_pallas
+    args, kw = _megastep_inputs(B=2, H=2, Hkv=1, Dh=16, bs=4, nb=6,
+                                max_blk=2, D=7168, E_log=4, E=4, K=2,
+                                F=64, Fs=64, cap=4, **case)
+    y_ref, h2_ref = ref.decode_megastep_ref(*args, **kw)
+    y_pal, h2_pal = decode_megastep_pallas(*args, **kw, block_f=64,
+                                           block_d=512, interpret=True)
     np.testing.assert_allclose(np.asarray(h2_pal), np.asarray(h2_ref),
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),

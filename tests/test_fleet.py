@@ -16,8 +16,9 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.fault_codes import ErrorType, Severity
-from repro.fleet import (CostModel, InstanceState, PoissonTraffic,
-                         RecoveryArbiter, TraceTraffic, build_fleet)
+from repro.fleet import (CostModel, DiurnalTraffic, InstanceState,
+                         PoissonTraffic, RecoveryArbiter, TraceTraffic,
+                         build_fleet)
 from repro.fleet.traffic import Arrival
 from repro.serving.engine import EngineConfig
 from repro.serving.sampling import SamplingParams
@@ -304,6 +305,53 @@ def test_traffic_sources_deterministic():
     assert tr.exhausted
     with pytest.raises(ValueError):
         PoissonTraffic(0.0, 512)
+
+
+def test_traffic_lognormal_lengths_seeded_and_heavy_tailed():
+    """length_dist='lognormal' turns the configured prompt/output shape
+    into medians of seeded heavy-tailed draws (campaign realism): same
+    seed -> identical stream, lengths spread around the median with a
+    real upper tail, clamps honored, fixed path untouched."""
+    import numpy as np
+
+    def stream(seed=9):
+        t = PoissonTraffic(200.0, 512, seed=seed, limit=400,
+                           prompt_len=8, max_new_tokens=8,
+                           length_dist="lognormal", length_sigma=0.75,
+                           max_prompt_len=64, max_output_len=48)
+        return t.due(1e9)
+
+    got = stream()
+    same = stream()
+    assert [(a.at_s, a.prompt_tokens, a.max_new_tokens) for a in got] \
+        == [(a.at_s, a.prompt_tokens, a.max_new_tokens) for a in same]
+
+    plens = np.array([len(a.prompt_tokens) for a in got])
+    outs = np.array([a.max_new_tokens for a in got])
+    for xs, cap in ((plens, 64), (outs, 48)):
+        assert xs.min() >= 1 and xs.max() <= cap
+        assert 6 <= np.median(xs) <= 10          # median ~ configured 8
+        assert xs.max() >= 3 * np.median(xs)     # heavy upper tail
+        assert len(set(xs.tolist())) > 5         # not a fixed shape
+
+    # fixed path: no heavy-tail draws, shapes exactly as configured
+    fixed = PoissonTraffic(200.0, 512, seed=9, limit=50,
+                           prompt_len=(4, 8), max_new_tokens=6)
+    for a in fixed.due(1e9):
+        assert len(a.prompt_tokens) in (4, 8)
+        assert a.max_new_tokens == 6
+
+    # diurnal variant inherits the knobs
+    d = DiurnalTraffic(50.0, 512, amplitude=0.5, period_s=10.0, seed=4,
+                       limit=100, length_dist="lognormal")
+    dlens = {len(a.prompt_tokens) for a in d.due(1e9)}
+    assert len(dlens) > 3
+
+    with pytest.raises(ValueError):
+        PoissonTraffic(1.0, 512, length_dist="gauss")
+    with pytest.raises(ValueError):
+        PoissonTraffic(1.0, 512, length_dist="lognormal",
+                       length_sigma=0.0)
 
 
 def test_engine_config_validation_raises_value_error():
