@@ -231,6 +231,114 @@ def admission_bench(workdir: str, quick: bool = False) -> Dict:
     return out
 
 
+def frontend_bench(workdir: str, quick: bool = False,
+                   slo_s: float = 30.0) -> Dict:
+    """Wall-clock serving through the real HTTP front end: sustained
+    req/s at a fixed p99 completion-latency SLO.
+
+    Unlike the virtual-clock sections above, this measures the whole
+    serving stack end to end — asyncio HTTP, SSE-free JSON completions,
+    the fleet driver thread, and the async pipelined engine — with a
+    closed-loop client pool hammering ``POST /v1/completions``.  The
+    p99 bound is deliberately loose (CI boxes vary); the hard gates are
+    that every request finishes and the SLO holds at the achieved rate.
+    """
+    import asyncio
+    import http.client
+    import json as _json
+    import threading
+
+    from repro.serving.frontend import ServingFrontend
+
+    n_requests = 8 if quick else 24
+    concurrency = 4 if quick else 6
+    max_tokens = 8 if quick else 12
+    ecfg = dataclasses.replace(_ecfg(workdir), overlap=True)
+    fleet = build_fleet(_cfg(), ecfg, instances=2)
+    fe = ServingFrontend(fleet, port=0)
+    loop = asyncio.new_event_loop()
+    started = threading.Event()
+
+    def _serve():
+        asyncio.set_event_loop(loop)
+        loop.run_until_complete(fe.start())
+        started.set()
+        loop.run_forever()
+
+    th = threading.Thread(target=_serve, daemon=True)
+    th.start()
+    assert started.wait(120), "front end failed to start"
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(0, _cfg().vocab_size, 10)))
+               for _ in range(n_requests + concurrency)]
+
+    def one(prompt: List[int]) -> float:
+        conn = http.client.HTTPConnection("127.0.0.1", fe.port,
+                                          timeout=600)
+        try:
+            t0 = time.perf_counter()
+            conn.request("POST", "/v1/completions",
+                         body=_json.dumps({
+                             "prompt": prompt, "max_tokens": max_tokens,
+                             "eos_token": None}),
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            body = _json.loads(resp.read())
+            assert resp.status == 200, body
+            toks = body["choices"][0]["tokens"]
+            assert len(toks) == max_tokens, (len(toks), body)
+            return time.perf_counter() - t0
+        finally:
+            conn.close()
+
+    # warm the compile caches + http path off the clock
+    one(prompts[-1])
+    lats: List[float] = []
+    lock = threading.Lock()
+    queue = list(range(n_requests))
+
+    def worker():
+        while True:
+            with lock:
+                if not queue:
+                    return
+                i = queue.pop()
+            dt = one(prompts[i])
+            with lock:
+                lats.append(dt)
+
+    t0 = time.perf_counter()
+    workers = [threading.Thread(target=worker)
+               for _ in range(concurrency)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    wall = time.perf_counter() - t0
+    gaps = [inst.engine.host_gap_fraction()
+            for inst in fleet.instances.values()
+            if inst.state.value != "dead"]
+    asyncio.run_coroutine_threadsafe(fe.stop(), loop).result(timeout=30)
+    loop.call_soon_threadsafe(loop.stop)
+    th.join(timeout=10)
+    assert len(lats) == n_requests
+    p99 = _percentile(lats, 99)
+    out = {
+        "n": n_requests, "concurrency": concurrency,
+        "max_tokens": max_tokens,
+        "wall_s": round(wall, 3),
+        "req_per_s": round(n_requests / wall, 3),
+        "tokens_per_s": round(n_requests * max_tokens / wall, 2),
+        "p50_latency_s": _percentile(lats, 50),
+        "p99_latency_s": p99,
+        "slo_s": slo_s,
+        "p99_within_slo": bool(p99 <= slo_s),
+        "host_gap_fraction": round(float(np.mean(gaps)), 4),
+    }
+    assert out["p99_within_slo"], out
+    return out
+
+
 def run(quick: bool = False) -> Dict:
     n_requests = 24 if quick else 48
     rate = 60.0          # open-loop: arrivals do not wait for recovery
@@ -266,6 +374,8 @@ def run(quick: bool = False) -> Dict:
         tempfile.mkdtemp(prefix="bench_prefix_sweep_"), quick=quick)
     out["admission"] = admission_bench(
         tempfile.mkdtemp(prefix="bench_admission_"), quick=quick)
+    out["frontend"] = frontend_bench(
+        tempfile.mkdtemp(prefix="bench_frontend_"), quick=quick)
     return out
 
 
@@ -350,6 +460,19 @@ def print_table(out: Dict) -> None:
         print(f"  chunked admission beats serial on p99 TTFT: {verdict} "
               f"({adm['p99_ttft_improvement_s'] * 1e3:+.0f}ms, "
               f"{adm['prefill_tokens_saved']} prefill tokens saved)")
+    if "frontend" in out:
+        fr = out["frontend"]
+        print("\n# HTTP front end, wall clock (closed loop, async "
+              "pipelined engine)")
+        print(f"  {fr['n']} requests x {fr['max_tokens']} tokens @ "
+              f"concurrency {fr['concurrency']}: "
+              f"{fr['req_per_s']:.2f} req/s "
+              f"({fr['tokens_per_s']:.1f} tok/s) in {fr['wall_s']:.1f}s")
+        ok = "yes" if fr["p99_within_slo"] else "NO (!)"
+        print(f"  p50 {fr['p50_latency_s'] * 1e3:.0f}ms  "
+              f"p99 {fr['p99_latency_s'] * 1e3:.0f}ms  "
+              f"(SLO {fr['slo_s']:.0f}s: {ok})  "
+              f"host gap {fr['host_gap_fraction'] * 100:.1f}%")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,16 @@ def main(argv=None) -> int:
                                  f"{r['accepted_per_step']:.2f},"
                                  f"windows={r['spec_windows']},"
                                  f"hist={hist}"))
+            elif r.get("kind") == "engine":
+                # host/device overlap surface: wall-clock TPOT plus the
+                # fraction of wall time the device idled on the host
+                ov = r.get("overlap", {})
+                extra = (f",planned_ahead={ov['planned_ahead']}"
+                         f",replans={ov['replans']}" if ov else "")
+                csv_rows.append((f"moe_hotpath_{r['name']}",
+                                 f"{r['metric_us']:.0f}",
+                                 f"host_gap_fraction="
+                                 f"{r['host_gap_fraction']:.4f}{extra}"))
             elif "mega_us" in r:
                 csv_rows.append((f"moe_hotpath_{r['name']}_mega",
                                  f"{r['mega_us']:.0f}",
@@ -130,6 +140,14 @@ def main(argv=None) -> int:
                              f"{res['p99_degradation_s'] * 1e3:.0f}"))
         csv_rows.append(("fleet_slo_revive_beats_restart",
                          "1" if out["revive_beats_restart"] else "0", ""))
+        if "frontend" in out:
+            fr = out["frontend"]
+            csv_rows.append((
+                "fleet_slo_frontend_req_per_s",
+                f"{1e6 / max(fr['req_per_s'], 1e-9):.0f}",
+                f"req_per_s={fr['req_per_s']:.3f},"
+                f"p99_s={fr['p99_latency_s']:.3f},"
+                f"host_gap_fraction={fr['host_gap_fraction']:.4f}"))
 
     if want("fleet_campaign"):
         from benchmarks import fleet_campaign

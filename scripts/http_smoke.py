@@ -1,0 +1,179 @@
+"""CI smoke for the streaming HTTP front end + mid-stream recovery.
+
+Boots a 2-instance fleet behind ``repro.launch.serve --http``, streams
+one completion over SSE, injects a device fault on the instance serving
+it mid-stream, and asserts:
+
+* the stream completes with every requested token (the revive path
+  keeps the position-seeded token stream bit-identical through the
+  fault — no client-visible gap, no wrong tokens);
+* ``/instances`` surfaces the arbiter's revive decision with its
+  counterfactual cost table;
+* ``/health`` reflects the degraded instance, and a planned restart
+  through ``/control`` brings the fleet back to ``healthy``.
+
+Run: ``python scripts/http_smoke.py`` (needs PYTHONPATH=src).
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+
+BOOT_TIMEOUT_S = 600      # first-ever jit compile on a cold CI runner
+STREAM_TIMEOUT_S = 600
+HEALTH_TIMEOUT_S = 300
+MAX_TOKENS = 48
+
+
+def wait_for_port(proc, lines):
+    """Scrape the bound port off the launcher's banner line."""
+    deadline = time.time() + BOOT_TIMEOUT_S
+    while time.time() < deadline:
+        for ln in list(lines):
+            m = re.search(r"serving on http://[\d.]+:(\d+)", ln)
+            if m:
+                return int(m.group(1))
+        if proc.poll() is not None:
+            sys.exit(f"server exited early ({proc.returncode}):\n"
+                     + "".join(lines))
+        time.sleep(0.25)
+    sys.exit("timed out waiting for the server banner:\n" + "".join(lines))
+
+
+def get_json(port, path, method="GET", body=None):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+    try:
+        payload = json.dumps(body) if body is not None else None
+        conn.request(method, path, body=payload,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        data = resp.read()
+        assert resp.status == 200, (path, resp.status, data[:300])
+        return json.loads(data)
+    finally:
+        conn.close()
+
+
+def loaded_instance(port):
+    info = get_json(port, "/instances")
+    for row in info["instances"]:
+        if row["state"] != "dead" and row.get("load", 0) > 0:
+            return row["iid"]
+    raise AssertionError(f"no loaded instance: {info['instances']}")
+
+
+def main() -> int:
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--fleet", "2",
+         "--mode", "collocated", "--num-dp", "2", "--overlap",
+         "--http", "0", "--workdir", "/tmp/http_smoke"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    lines: list = []
+    threading.Thread(target=lambda: lines.extend(proc.stdout),
+                     daemon=True).start()
+    try:
+        port = wait_for_port(proc, lines)
+        print(f"server up on :{port}")
+
+        health = get_json(port, "/health")
+        assert health["state"] == "healthy", health
+        assert health["serving"] == 2, health
+
+        # stream one completion over SSE
+        conn = http.client.HTTPConnection("127.0.0.1", port,
+                                          timeout=STREAM_TIMEOUT_S)
+        conn.request("POST", "/v1/completions", body=json.dumps({
+            "prompt": [5, 9, 2, 7] * 3, "max_tokens": MAX_TOKENS,
+            "stream": True, "eos_token": None,
+        }), headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 200, resp.status
+
+        tokens: list = []
+        finish_reason = None
+        faulted = False
+        target = None
+        buf = b""
+        while True:
+            chunk = resp.read1(65536)
+            if not chunk:
+                break
+            buf += chunk
+            while b"\n\n" in buf:
+                ev, buf = buf.split(b"\n\n", 1)
+                if not ev.startswith(b"data: "):
+                    continue
+                payload = ev[len(b"data: "):]
+                if payload == b"[DONE]":
+                    buf = b""
+                    break
+                choice = json.loads(payload)["choices"][0]
+                tokens.extend(choice["tokens"])
+                if choice["finish_reason"] is not None:
+                    finish_reason = choice["finish_reason"]
+            if not faulted and len(tokens) >= 6:
+                # mid-stream: fail a device on the instance serving us
+                target = loaded_instance(port)
+                res = get_json(port, "/control", method="POST",
+                               body={"op": "fail_device", "iid": target})
+                print(f"injected device fault on instance {target}: {res}")
+                faulted = True
+            if finish_reason is not None:
+                break
+        conn.close()
+        assert faulted, "stream finished before the fault was injected"
+        assert len(tokens) == MAX_TOKENS, (len(tokens), MAX_TOKENS)
+        assert finish_reason == "length", finish_reason
+        print(f"stream completed through the fault: "
+              f"{len(tokens)} tokens, finish_reason={finish_reason}")
+
+        # the arbiter's decision must be visible with its cost table
+        info = get_json(port, "/instances")
+        revives = [d for d in info["decisions"]
+                   if d.get("decision", {}).get("policy") == "revive"]
+        assert revives, f"no revive decision recorded: {info['decisions']}"
+        assert "est_cost_s" in revives[0]["decision"], revives[0]
+        print(f"arbiter decision: {revives[0]['decision']}")
+
+        # the revived instance serves degraded (a DP rank down / experts
+        # masked) until a planned restart restores it
+        health = get_json(port, "/health")
+        inst = health["instances"][str(target)]
+        assert inst["degraded"], inst
+        assert health["state"] == "degraded", health["state"]
+        print(f"health degraded as expected: instance {target} "
+              f"healthy_dp={inst['healthy_dp']}/{inst['total_dp']} "
+              f"masked={inst['masked_expert_fraction']:.3f}")
+
+        get_json(port, "/control", method="POST",
+                 body={"op": "planned_restart", "iid": target})
+        deadline = time.time() + HEALTH_TIMEOUT_S
+        while time.time() < deadline:
+            health = get_json(port, "/health")
+            inst = health["instances"][str(target)]
+            if health["state"] == "healthy" and not inst["degraded"]:
+                break
+            time.sleep(1.0)
+        assert health["state"] == "healthy", health
+        assert not inst["degraded"], inst
+        print("fleet healthy again after planned restart")
+        print("HTTP smoke OK")
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,24 +73,109 @@ class BlockOp:
     meta: Any = None          # op-specific inverse info (digest, index...)
 
 
-class BlockLog:
-    """Per-executor undo log, cleared at each generation-step boundary."""
+class _Frame:
+    """One uncommitted step's undo payload: block ops + pool rollback."""
+    __slots__ = ("ops", "pool_undo", "pool_snapshot")
 
     def __init__(self):
-        self._ops: List[BlockOp] = []
+        self.ops: List[BlockOp] = []
+        self.pool_undo = None
+        self.pool_snapshot = None
+
+
+def _undo_op(op: BlockOp, manager: "BlockManager",
+             tables: Dict[int, "BlockTable"]) -> None:
+    if op.kind == "alloc":
+        # undoing an allocation decrements the ref count / deletes
+        manager._undo_alloc(op.block_id)
+    elif op.kind == "free":
+        manager._undo_free(op.block_id, op.prev_ref)
+    elif op.kind == "append":
+        tables[op.seq_id]._undo_append(op.block_id)
+    elif op.kind == "ref":
+        manager._set_ref(op.block_id, op.prev_ref)
+    elif op.kind == "unref":
+        manager._set_ref(op.block_id, op.prev_ref)
+    elif op.kind == "cache_acquire":
+        manager._undo_cache_acquire(op.block_id, op.prev_ref)
+    elif op.kind == "hash_set":
+        manager._undo_register(op.block_id)
+    elif op.kind == "table_set":
+        idx, prev_bid = op.meta
+        tables[op.seq_id].blocks[idx] = prev_bid
+    else:  # pragma: no cover
+        raise ValueError(op.kind)
+
+
+class _OldestRecorder:
+    """Record-only view of a log's *oldest* frame.
+
+    The overlap pipeline drains step N-1 after step N has already been
+    planned (its frame pushed on top): bookkeeping ops that belong to
+    the draining step — decode-grown prefix registrations, finish
+    frees — must land in N-1's frame, not N's, so a later rollback of
+    N never undoes N-1's committed outcome."""
+
+    def __init__(self, log: "BlockLog"):
+        self._log = log
+
+    def record(self, op: BlockOp) -> None:
+        self._log._frames[0].ops.append(op)
+
+
+class BlockLog:
+    """Per-executor undo log of uncommitted step *frames*.
+
+    The lockstep engine keeps exactly one frame (cleared at each step
+    boundary — the historical behaviour).  The overlap pipeline keeps up
+    to two: the in-flight step plus the plan-ahead step stacked on top.
+    Frames commit oldest-first and roll back newest-first, so the §3.3
+    undo stays exact whichever way the pipeline resolves."""
+
+    def __init__(self):
+        self._frames: List[_Frame] = [_Frame()]
         self.steps_committed = 0
-        self._pool_snapshot = None
-        self._pool_undo = None
 
     def begin_step(self) -> None:
         """Previous step fully completed -> its log is no longer needed."""
-        self._ops.clear()
-        self._pool_snapshot = None
-        self._pool_undo = None
+        self._frames = [_Frame()]
         self.steps_committed += 1
 
     def record(self, op: BlockOp) -> None:
-        self._ops.append(op)
+        self._frames[-1].ops.append(op)
+
+    # -- multi-frame surface (overlap pipeline) -------------------------------
+
+    @property
+    def num_frames(self) -> int:
+        return len(self._frames)
+
+    def push_frame(self) -> None:
+        """Open a new uncommitted frame on top (plan-ahead step)."""
+        self._frames.append(_Frame())
+
+    def commit_oldest(self) -> None:
+        """The oldest uncommitted frame's step reached its boundary."""
+        self._frames.pop(0)
+        if not self._frames:
+            self._frames.append(_Frame())
+        self.steps_committed += 1
+
+    def oldest(self):
+        """A record-only view targeting the oldest frame (drain-phase
+        bookkeeping of the step about to commit)."""
+        return self if len(self._frames) == 1 else _OldestRecorder(self)
+
+    def undo_newest(self, manager: "BlockManager",
+                    tables: Dict[int, "BlockTable"]) -> int:
+        """Roll back and drop the newest frame's ops (reverse order).
+        Callers restore its pool rows first via ``take_pool_undo``."""
+        frame = self._frames.pop()
+        if not self._frames:
+            self._frames.append(_Frame())
+        for op in reversed(frame.ops):
+            _undo_op(op, manager, tables)
+        return len(frame.ops)
 
     # -- pool consistency (the device-side half of §3.3) ----------------------
 
@@ -101,61 +186,49 @@ class BlockLog:
         in-flight pool write exactly.  It pins the pre-step pool buffers,
         which forbids donating/aliasing them into the compiled update;
         row-level undo (below) is the donation-friendly replacement."""
-        self._pool_snapshot = cache
+        self._frames[-1].pool_snapshot = cache
 
     def take_pool_snapshot(self):
         """The cache value to restore on rollback (None once committed)."""
-        snap = self._pool_snapshot
-        self._pool_snapshot = None
+        frame = self._frames[-1]
+        snap = frame.pool_snapshot
+        frame.pool_snapshot = None
         return snap
 
     def record_pool_undo(self, undo) -> None:
         """Row-level strategy: stash the captured write-set rows
         (``cache_ops.capture_pool_rows``) for the in-flight step."""
-        self._pool_undo = undo
+        self._frames[-1].pool_undo = undo
 
     def take_pool_undo(self):
-        undo = self._pool_undo
-        self._pool_undo = None
+        frame = self._frames[-1]
+        undo = frame.pool_undo
+        frame.pool_undo = None
         return undo
 
     def peek_pool_undo(self):
-        """Non-destructive read of the in-flight step's captured write
+        """Non-destructive read of the newest frame's captured write
         set — the speculative-decode verify phase restores the *rejected*
         rows from it mid-compute while the full payload stays armed."""
-        return self._pool_undo
+        return self._frames[-1].pool_undo
+
+    def has_pool_state(self) -> bool:
+        return any(f.pool_undo is not None or f.pool_snapshot is not None
+                   for f in self._frames)
 
     def __len__(self) -> int:
-        return len(self._ops)
+        return sum(len(f.ops) for f in self._frames)
 
     def undo_all(self, manager: "BlockManager",
                  tables: Dict[int, "BlockTable"]) -> int:
-        """Roll back every op of the in-flight step, in reverse order.
-
-        Returns the number of ops undone."""
-        n = len(self._ops)
-        for op in reversed(self._ops):
-            if op.kind == "alloc":
-                # undoing an allocation decrements the ref count / deletes
-                manager._undo_alloc(op.block_id)
-            elif op.kind == "free":
-                manager._undo_free(op.block_id, op.prev_ref)
-            elif op.kind == "append":
-                tables[op.seq_id]._undo_append(op.block_id)
-            elif op.kind == "ref":
-                manager._set_ref(op.block_id, op.prev_ref)
-            elif op.kind == "unref":
-                manager._set_ref(op.block_id, op.prev_ref)
-            elif op.kind == "cache_acquire":
-                manager._undo_cache_acquire(op.block_id, op.prev_ref)
-            elif op.kind == "hash_set":
-                manager._undo_register(op.block_id)
-            elif op.kind == "table_set":
-                idx, prev_bid = op.meta
-                tables[op.seq_id].blocks[idx] = prev_bid
-            else:  # pragma: no cover
-                raise ValueError(op.kind)
-        self._ops.clear()
+        """Roll back every op of every uncommitted frame, newest frame
+        first, each frame in reverse order.  Returns the ops undone."""
+        n = 0
+        for frame in reversed(self._frames):
+            for op in reversed(frame.ops):
+                _undo_op(op, manager, tables)
+            n += len(frame.ops)
+        self._frames = [_Frame()]
         return n
 
 

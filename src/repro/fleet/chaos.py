@@ -44,13 +44,39 @@ class VirtualCostProfile:
     every second on the clock — and every observation fed to the
     measurement-driven :class:`~repro.fleet.arbiter.CostModel` — is a
     deterministic function of the campaign seed.  The defaults keep the
-    paper's ordering: revive ≪ spare swap ≪ restart."""
+    paper's ordering: revive ≪ spare swap ≪ restart.
+
+    ``jitter`` > 0 replaces each *recovery* charge (revive / restart /
+    spare swap — not the step clock) with a seeded lognormal draw
+    around its base: ``base * LogNormal(0, jitter)`` from an rng keyed
+    on ``(jitter_seed, action kind, per-kind event index)``.  Costs
+    stay a pure function of the profile — the same seed replays a
+    byte-identical forensics document — but the arbiter now trains its
+    cost model against dispersed observations instead of constants.
+    ``jitter=0`` (default) reproduces the constant-cost behavior
+    exactly."""
     step_s: float = 0.02               # one engine step (decode tick)
     revive_s: float = 0.03             # in-place revive stall
     restart_s: float = 2.5             # full instance relaunch
     spare_swap_s: float = 0.05         # control-plane substitution
     per_token_prefill_s: float = 2e-4  # token-replay re-prefill rate
     per_block_stream_s: float = 2e-5   # KV-block streaming rate
+    jitter: float = 0.0                # lognormal sigma on recovery costs
+    jitter_seed: int = 0
+
+    # stable kind ids: part of the determinism contract (renumbering
+    # would silently change every jittered campaign)
+    _KIND_IDS = {"revive": 0, "restart": 1, "spare": 2}
+
+    def event_cost(self, kind: str, index: int, base_s: float) -> float:
+        """The charge for the ``index``-th recovery of ``kind``: the
+        pinned base, scaled by this event's seeded lognormal draw when
+        jitter is on.  Rounded so forensics stay byte-comparable."""
+        if self.jitter <= 0.0:
+            return base_s
+        rng = np.random.default_rng(
+            [self.jitter_seed, self._KIND_IDS.get(kind, 3), index])
+        return round(base_s * float(rng.lognormal(0.0, self.jitter)), 6)
 
     def cost_model(self, **kw) -> CostModel:
         """A CostModel seeded purely from the profile (no wall-clock

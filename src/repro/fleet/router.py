@@ -129,6 +129,7 @@ class FleetRouter:
         self.backlog: List[Request] = []         # no-capacity queue
         self.shed_requests = 0                   # backpressure rejections
         self._frozen: Dict[int, float] = {}      # iid -> stall seconds left
+        self._cost_events: Dict[str, int] = {}   # policy -> events charged
         self._pending: Dict[int, List[ArbiterDecision]] = {}
         self._report_seen: Dict[int, int] = {}
         self._last_dec: Dict[int, ArbiterDecision] = {}
@@ -165,16 +166,25 @@ class FleetRouter:
                      tokens: int = 0, blocks: int = 0) -> float:
         """Stall seconds to put on the virtual clock for one recovery
         action: the measured wall cost, or the pinned profile cost in
-        campaign (deterministic) mode."""
+        campaign (deterministic) mode — per-event lognormal-jittered
+        when the profile asks for dispersion (still a pure function of
+        the profile seed and this action's per-kind sequence number)."""
         p = self.cost_profile
         if p is None:
             return wall_s
         if policy == "revive":
-            return p.revive_s
-        if policy == "restart":
-            return p.restart_s
-        return (p.spare_swap_s + tokens * p.per_token_prefill_s
-                + blocks * p.per_block_stream_s)
+            base = p.revive_s
+        elif policy == "restart":
+            base = p.restart_s
+        else:
+            base = (p.spare_swap_s + tokens * p.per_token_prefill_s
+                    + blocks * p.per_block_stream_s)
+        idx = self._cost_events.get(policy, 0)
+        self._cost_events[policy] = idx + 1
+        event_cost = getattr(p, "event_cost", None)
+        if event_cost is None:          # bare profile (tests use stubs)
+            return base
+        return event_cost(policy, idx, base)
 
     def _record(self, inst: FleetInstance, policy: str, charged_s: float,
                 *, dec: Optional[ArbiterDecision] = None,
@@ -749,7 +759,11 @@ class FleetRouter:
         if not serving:
             state = "critical"
         elif (self.backlog or starved
-              or any(self._frozen.get(i.iid, 0.0) > 0.0 for i in serving)):
+              or any(self._frozen.get(i.iid, 0.0) > 0.0 for i in serving)
+              # a revived instance serving with masked experts or a DP
+              # rank down is degraded capacity, not healthy capacity —
+              # the serving front end surfaces this distinction
+              or any(i.health().degraded for i in serving)):
             state = "degraded"
         else:
             state = "healthy"

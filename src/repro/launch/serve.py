@@ -26,7 +26,18 @@ def _run_fleet(args, cfg) -> int:
                       num_moe=args.num_moe, max_batch=4, max_seq=128,
                       block_size=16, num_blocks=256,
                       decode_impl=args.decode_impl,
+                      overlap=args.overlap,
                       workdir=args.workdir)
+    if args.http is not None:
+        # HTTP mode: arrivals come from clients, not a synthetic trace
+        fleet = build_fleet(cfg, ec, instances=args.fleet,
+                            spares=args.spares,
+                            force_policy=args.force_policy,
+                            replenish_spares=args.replenish_spares,
+                            kv_stream=not args.no_kv_stream)
+        from repro.serving.frontend import serve_http
+        serve_http(fleet, host=args.http_host, port=args.http)
+        return 0
     traffic = PoissonTraffic(args.rate, cfg.vocab_size, prompt_len=12,
                              max_new_tokens=args.max_new, seed=0,
                              limit=args.requests)
@@ -104,7 +115,19 @@ def main(argv=None):
     ap.add_argument("--no-kv-stream", action="store_true",
                     help="force token-replay re-prefill on migration "
                     "(disable KV-block streaming)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async pipelined engine: plan step N+1 while "
+                    "step N runs on device (token streams stay "
+                    "bit-identical to lockstep)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve an OpenAI-style HTTP front end "
+                    "(/v1/completions with SSE streaming, /health, "
+                    "/instances, /control) instead of a synthetic "
+                    "request batch; 0 picks a free port")
+    ap.add_argument("--http-host", default="127.0.0.1")
     args = ap.parse_args(argv)
+    if args.http is not None and args.fleet == 0:
+        args.fleet = 1              # the front end drives a FleetRouter
 
     from repro.configs import get_smoke_config
     from repro.core.fault_codes import ErrorType, Severity
@@ -116,7 +139,7 @@ def main(argv=None):
     ec = EngineConfig(mode=args.mode, num_dp=args.num_dp,
                       num_moe=args.num_moe, max_batch=4, max_seq=128,
                       block_size=16, num_blocks=256, workdir=args.workdir,
-                      decode_impl=args.decode_impl)
+                      decode_impl=args.decode_impl, overlap=args.overlap)
     print(f"building engine: {args.arch} ({args.mode}, "
           f"{args.num_dp} DP + {args.num_moe if cfg.moe else 0} MoE ranks)")
     eng = InferenceEngine(cfg, ec)

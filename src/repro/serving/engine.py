@@ -164,6 +164,16 @@ class EngineConfig:
     # 0/1 disables; chunked admission only (recurrent-prefill models
     # fall back to plain decode automatically)
     spec_window: int = 0
+    # async pipelined engine: while step N runs on device, plan step N+1
+    # against the predicted post-N state (speculative host bookkeeping
+    # only — token streams stay bit-identical to lockstep, and §3.3
+    # rollback/replay is unchanged because every plan-ahead frame
+    # unwinds before recovery looks at the tables).  Tokens are sampled
+    # on-device and drained one step late through a small ring of
+    # in-flight D2H copies.  Requires chunked admission + row-level
+    # pool undo; models without chunked-prefill support fall back to
+    # lockstep automatically.
+    overlap: bool = False
 
     def __post_init__(self):
         # ValueError (not assert) so misconfiguration still fails loudly
@@ -228,6 +238,17 @@ class EngineConfig:
                 f"EngineConfig.spec_window ({self.spec_window}) cannot "
                 f"exceed prefill_chunk ({self.prefill_chunk}) — verify "
                 f"windows ride the chunk graph")
+        if self.overlap and self.pool_undo != "rows":
+            raise ValueError(
+                "EngineConfig.overlap requires pool_undo='rows' — "
+                "stacked plan-ahead frames restore per-frame write "
+                "sets; the whole-pool snapshot cannot unwind one frame "
+                "at a time")
+        if self.overlap and self.admission != "chunked":
+            raise ValueError(
+                "EngineConfig.overlap requires admission='chunked' — "
+                "whole-prefill installs synchronize with the device "
+                "and cannot be planned ahead")
 
 
 @dataclass
@@ -285,6 +306,10 @@ class InferenceEngine:
         # slowdown) instead of the wall clock, so chaos campaigns are a
         # pure function of their seed
         self.virtual_step_s: Optional[float] = None
+        # wall-clock spent inside executor step calls (summed across
+        # ranks, both lockstep and overlap paths) — the denominator of
+        # ``host_gap_fraction``; the numerator lives on the executors
+        self.perf: Dict[str, float] = {"wall_s": 0.0}
         self._build(first_time=True)
 
     # -- construction / reinitialization ---------------------------------------
@@ -506,6 +531,12 @@ class InferenceEngine:
         return (self.ecfg.admission == "chunked"
                 and self.model.supports_chunked_prefill)
 
+    @property
+    def _overlap_active(self) -> bool:
+        # recurrent-prefill models fall back to lockstep (they cannot
+        # chunk, so plan-ahead would have to predict whole prefills)
+        return self.ecfg.overlap and self._chunking
+
     # -- compiled-fn access ------------------------------------------------------
 
     def get_compiled(self, phase: str, bucket: Optional[int] = None):
@@ -624,9 +655,15 @@ class InferenceEngine:
         out = []
         for ex in self.dp_executors:
             payloads = {}
+            # pipeline quiesce before the export: the in-flight step's
+            # readback already landed, so its outcome commits; leftover
+            # speculative overlays must not leak into migration prompts,
+            # even from dead executors (rollback is cache-None-safe)
+            if ex._inflight is not None:
+                ex.flush(None)
+            if ex.has_uncommitted():
+                ex.rollback_inflight()
             if with_kv and ex.alive and ex.cache is not None:
-                if len(ex.block_log) > 0:
-                    ex.rollback_inflight()
                 for req in list(ex.scheduler.running):
                     blocks_kv = ex.export_kv_blocks(req)
                     if blocks_kv is not None:
@@ -737,6 +774,8 @@ class InferenceEngine:
     # -- main loop --------------------------------------------------------------------
 
     def step(self) -> List[Request]:
+        if self._overlap_active:
+            return self._step_overlap()
         self.step_no += 1
         # finish deferred role switches in the background (§4.3): service
         # already resumed; these timings are not downtime
@@ -785,6 +824,7 @@ class InferenceEngine:
             n_compiles = real_compiles()
             finished.extend(ex.compute(ctx, self.step_no))
             ex.commit()
+            self.perf["wall_s"] += time.perf_counter() - t0
             # slowdown detection (§6 future work): per-device step time;
             # steps that triggered a fresh compile are not samples
             if real_compiles() == n_compiles:
@@ -804,6 +844,123 @@ class InferenceEngine:
             if alive:
                 self.monitor.beat(ex.physical_id, self.step_no)
         return finished
+
+    def _step_overlap(self) -> List[Request]:
+        """Pipelined step: each executor plans+launches step N against
+        the predicted post-(N-1) state, then drains step N-1 (whose
+        logits forced while N's plan was being built on the host).
+        Fault handling is strictly *before* any executor work and always
+        quiesces the pipeline first — flush the in-flight step (its
+        readback predates the fault), roll back anything else — so
+        recovery, and the migration/replay machinery behind it, sees
+        exactly the state lockstep would have committed."""
+        self.step_no += 1
+        while self.pending_switches:
+            plan = self.pending_switches.pop(0)
+            self.background_reports.append(
+                self.recovery.complete_background_switch(plan))
+        self.injector.pre_step_faults(self.step_no)
+        events = list(self.poller.poll()) + list(
+            self.monitor.check(self.step_no))
+        finished: List[Request] = []
+        if events:
+            finished.extend(self._quiesce_inflight())
+            for ev in events:
+                self._handle(ev)
+
+        # mid-step faults fire while the previous step's collective is
+        # still in flight — the canonical §3.3 scenario the pipeline
+        # must survive: the already-drained-readback step commits, the
+        # faulted step's partial work rolls back, and replay regenerates
+        # everything after the commit point bit-identically
+        hit = False
+        alive_dp = [ex for ex in self.dp_executors
+                    if ex.alive and ex.cache is not None]
+        for ex in alive_dp + [m for m in self.moe_executors
+                              if m.device_alive]:
+            try:
+                self.injector.maybe_fail_mid_step(self.step_no,
+                                                  ex.physical_id)
+            except SimulatedDeviceFailure:
+                ex.fail_device()
+                hit = True
+        if hit:
+            finished.extend(self._quiesce_inflight())
+            for ev in self.poller.poll():
+                self._handle(ev)
+            return finished
+
+        ctx = _Ctx(self)
+        def real_compiles():
+            return sum(1 for t in self.graph_cache.timings
+                       if t.compile_s > 0.01)
+
+        for ex in self.dp_executors:
+            if not (ex.alive and ex.cache is not None):
+                continue
+            if not (ex.scheduler.num_requests or ex._inflight is not None):
+                continue
+            t0 = time.perf_counter()
+            n_compiles = real_compiles()
+            finished.extend(ex.overlap_step(ctx, self.step_no))
+            self.perf["wall_s"] += time.perf_counter() - t0
+            if real_compiles() == n_compiles:
+                base = (self.virtual_step_s
+                        if self.virtual_step_s is not None
+                        else time.perf_counter() - t0)
+                self.straggler.record(
+                    ex.physical_id, base + ex.simulated_slowdown_s)
+        self.soft_signals = self.straggler.suspects()
+        events = list(self.straggler.check())
+        if events:
+            finished.extend(self._quiesce_inflight())
+            for ev in events:
+                self._handle(ev)
+        for ex in self.dp_executors + self.moe_executors:
+            alive = (ex.device_alive if isinstance(ex, MoEExecutor)
+                     else ex.alive)
+            if alive:
+                self.monitor.beat(ex.physical_id, self.step_no)
+        return finished
+
+    def _quiesce_inflight(self) -> List[Request]:
+        """Retire the pipeline before recovery or migration reads
+        request/table state.  The in-flight step launched a full engine
+        step before the fault fired, so its token-id readback was
+        already on the wire — flush commits its authoritative outcome
+        through the normal drain path, exactly the step lockstep had
+        already committed synchronously (this is what keeps fault-path
+        token streams bit-identical to lockstep).  Anything still
+        uncommitted afterwards rolls back via §3.3.  Runs on *all* DP
+        executors — a FAILED executor's pending outcome still commits
+        (its readback preceded the fault), and its overlays must never
+        leak into the migration replay prompt (rollback is
+        cache-None-safe)."""
+        finished: List[Request] = []
+        for ex in self.dp_executors:
+            if ex._inflight is not None:
+                finished.extend(ex.flush(None))
+            if ex.has_uncommitted():
+                ex.rollback_inflight()
+        return finished
+
+    def host_gap_fraction(self) -> float:
+        """Fraction of executor-step wall time the device spent idle
+        waiting on host work (planning, sampling, readback).  The
+        overlap pipeline exists to drive this toward zero."""
+        wall = self.perf["wall_s"]
+        if wall <= 0.0:
+            return 0.0
+        busy = sum(ex.perf["device_busy_s"] for ex in self.dp_executors)
+        return max(0.0, 1.0 - busy / wall)
+
+    def overlap_stats(self) -> Dict[str, int]:
+        """Aggregated pipeline counters across attention ranks."""
+        out = {"steps": 0, "planned_ahead": 0, "replans": 0, "drains": 0}
+        for ex in self.dp_executors:
+            for k, v in ex.overlap_stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
 
     def run(self, max_steps: int = 1000) -> List[Request]:
         done: List[Request] = []
@@ -996,7 +1153,13 @@ class InferenceEngine:
         in_flight = []
         for ex in self.dp_executors:
             # dead executors included: their requests' token ids survive
-            # in host memory and must be requeued after the rebuild
+            # in host memory and must be requeued after the rebuild —
+            # the in-flight step's readback landed (commit it), minus
+            # any speculative overlay still riding on the requests
+            if ex._inflight is not None:
+                ex.flush(None)
+            if ex.has_uncommitted():
+                ex.rollback_inflight()
             in_flight.extend(ex.scheduler.drain())
         self.monitor = HeartbeatMonitor(self.ecfg.heartbeat_timeout_steps)
         # process death: in-memory executables are gone (the on-disk

@@ -22,6 +22,7 @@ the op log, pools by scattering the captured write-set rows back.
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -37,8 +38,9 @@ from repro.serving.cache_ops import (capture_pool_rows,
 from repro.serving.kvcache import (build_chunk_context, build_page_context,
                                    max_blocks_per_seq, padded_block_ids)
 from repro.serving.request import Request, RequestState
-from repro.serving.sampling import SamplingParams, sample, spec_verify
-from repro.serving.scheduler import LocalScheduler, StepPlan
+from repro.serving.sampling import (SamplingParams, device_predict, sample,
+                                    seeded_uniforms, spec_verify)
+from repro.serving.scheduler import ChunkPiece, LocalScheduler, StepPlan
 
 
 def next_bucket(n: int, max_seq: int, min_bucket: int = 16) -> int:
@@ -46,6 +48,71 @@ def next_bucket(n: int, max_seq: int, min_bucket: int = 16) -> int:
     while b < n:
         b *= 2
     return min(b, max_seq)
+
+
+@dataclass
+class _Point:
+    """One sampling event of an in-flight step (overlap pipeline)."""
+    req: Request
+    kind: str                   # 'chunk_last' | 'spec' | 'decode'
+    section: str                # which launch holds its logits
+    row: int                    # logits row (chunk row0 / decode slot)
+    win: Optional[ChunkPiece] = None
+    guesses: List[int] = field(default_factory=list)
+    positions: List[int] = field(default_factory=list)
+    predicted_done: bool = False
+    sidx: int = -1              # row in the device-predict arrays
+
+
+@dataclass
+class _Det:
+    """Deterministic chunk bookkeeping applied at launch (plan-ahead):
+    correct whatever the step's sampled outcome, undone only when the
+    whole plan is rolled back (reconcile / fault abort)."""
+    req: Request
+    piece: ChunkPiece
+    prev_prefill_pos: int
+    prev_next_register: Optional[int]
+    counted_was: bool
+
+
+@dataclass
+class _Actual:
+    """Authoritative outcome of one sampling event, host-derived from
+    the drained logits (pure — nothing mutated until the pipeline
+    decides between confirm and reconcile)."""
+    tokens: List[int]
+    accepted: int
+    finished: bool
+
+
+class _Pending:
+    """One launched-but-uncommitted step riding the readback ring:
+    device references to its logits and predicted tokens (D2H copies
+    enqueued at launch, forced one step late), plus the speculative
+    host bookkeeping needed to confirm or unwind it."""
+    __slots__ = ("plan", "step_no", "chunk_logits", "decode_logits",
+                 "pred_chunk", "pred_decode", "points", "det",
+                 "prefill_finished", "t_launch")
+
+    def __init__(self, plan: StepPlan, step_no: int):
+        self.plan = plan
+        self.step_no = step_no
+        self.chunk_logits = None
+        self.decode_logits = None
+        self.pred_chunk = None      # (targets, accepted) device arrays
+        self.pred_decode = None
+        self.points: List[_Point] = []
+        self.det: List[_Det] = []
+        self.prefill_finished: List[Request] = []
+        self.t_launch = 0.0
+
+
+def _host_async(*arrays) -> None:
+    """Enqueue device→host copies without blocking (the readback ring)."""
+    for a in arrays:
+        if a is not None and hasattr(a, "copy_to_host_async"):
+            a.copy_to_host_async()
 
 
 class MoEExecutor:
@@ -126,6 +193,15 @@ class DPExecutor:
         self._plan: Optional[StepPlan] = None
         # injected extra per-step latency (straggler simulation)
         self.simulated_slowdown_s = 0.0
+        # overlap pipeline state: the launched-but-undrained step, plus a
+        # device-resident next-token vector so step N+1's inputs chain
+        # from step N without a host round trip
+        self._inflight: Optional[_Pending] = None
+        self._dev_last = None
+        self._dev_stale = True
+        self.overlap_stats = {"steps": 0, "planned_ahead": 0,
+                              "replans": 0, "drains": 0}
+        self.perf = {"device_busy_s": 0.0}
 
     # -- lifecycle --------------------------------------------------------------
 
@@ -259,10 +335,22 @@ class DPExecutor:
                 np.concatenate(out_o).astype(np.int32))
 
     def compute(self, ctx, step_no: int) -> List[Request]:
-        """Run the planned step on device; returns finished requests."""
+        """Run the planned step on device; returns finished requests.
+
+        Lockstep path: dispatch then commit back to back.  The overlap
+        pipeline calls the same two halves a step apart."""
+        return self.finish_compute(self.begin_compute(ctx, step_no))
+
+    def begin_compute(self, ctx, step_no: int,
+                      predict: bool = False) -> _Pending:
+        """Dispatch the planned step's device work without forcing any
+        result.  With ``predict`` (overlap pipeline) the launch's token
+        inputs come from the device-resident chain instead of the host
+        vector, and a jitted epilogue samples the step's tokens
+        on-device so the next step can launch before this one drains."""
         plan, self._plan = self._plan, None
         assert plan is not None, "compute without plan"
-        finished: List[Request] = []
+        pend = _Pending(plan, step_no)
         params, runtime = ctx.params, ctx.runtime
 
         if plan.chunks or plan.spec:
@@ -270,34 +358,14 @@ class DPExecutor:
                 plan.chunks + plan.spec, self.scheduler.block_tables,
                 width=self.chunk_tokens, max_blk=self.max_blk,
                 block_size=self.block_size, trash_block=self.trash_block)
+            if predict:
+                tokens = self._chain_chunk_tokens(tokens, plan)
             logits, self.cache = ctx.chunk_fn()(
                 params, self.cache, tokens, page, runtime)
-            logits = np.asarray(logits)
-            row = 0
-            for piece in plan.chunks:
-                req = piece.req
-                req.prefill_pos = piece.start + piece.length
-                self.scheduler.note_chunk_done(piece, self.block_log)
-                if piece.last:
-                    # seed by sequence position, not engine step: the
-                    # token is a pure function of (seed, prefix,
-                    # position) and survives replay on any executor of
-                    # any fleet instance
-                    tok = int(sample(logits[row + piece.length - 1][None],
-                                     self.sampling,
-                                     step=req.num_tokens)[0])
-                    req.output_tokens.append(tok)
-                    req.note_token()
-                    req.state = RequestState.RUNNING
-                    self.last_token[req.batch_slot] = tok
-                    if req.done or req.num_tokens >= self.max_seq:
-                        self.scheduler.finish(req, self.block_log)
-                        req.finish_time = time.monotonic()
-                        finished.append(req)
-                row += piece.length
-            if plan.spec:
-                finished.extend(self._verify_spec(plan, logits, row))
+            pend.chunk_logits = logits
 
+        assert not (predict and plan.prefills), \
+            "overlap requires chunked admission (no whole-prompt installs)"
         for req in plan.prefills:
             toks = req.tokens_so_far
             bucket = next_bucket(len(toks), self.max_seq)
@@ -324,18 +392,68 @@ class DPExecutor:
             if req.done:
                 self.scheduler.finish(req, self.block_log)
                 req.finish_time = time.monotonic()
-                finished.append(req)
+                pend.prefill_finished.append(req)
 
         if plan.decode:
             page = build_page_context(
                 plan.decode, self.scheduler.block_tables,
                 max_batch=self.max_batch, max_blk=self.max_blk,
                 block_size=self.block_size, trash_block=self.trash_block)
-            tokens = np.asarray(self.last_token)
+            tokens = (self._dev_chain() if predict
+                      else np.asarray(self.last_token))
             logits, new_cache = ctx.decode_fn(
                 params, self.cache, tokens, page, runtime)
             self.cache = new_cache
-            logits = np.asarray(logits)
+            pend.decode_logits = logits
+
+        pend.t_launch = time.perf_counter()
+        if predict:
+            self._launch_predict(pend)
+        return pend
+
+    def finish_compute(self, pend: _Pending,
+                       chunk_book: bool = True) -> List[Request]:
+        """Force the step's logits and commit its outcome on the host
+        (the authoritative sampler).  ``chunk_book=False`` skips the
+        chunk-piece bookkeeping the overlap launch already applied."""
+        plan = pend.plan
+        finished: List[Request] = []
+        t_done = None
+
+        if pend.chunk_logits is not None:
+            logits = np.asarray(pend.chunk_logits)
+            t_done = time.perf_counter()
+            row = 0
+            for piece in plan.chunks:
+                req = piece.req
+                if chunk_book:
+                    req.prefill_pos = piece.start + piece.length
+                    self.scheduler.note_chunk_done(piece, self.block_log)
+                if piece.last:
+                    # seed by sequence position, not engine step: the
+                    # token is a pure function of (seed, prefix,
+                    # position) and survives replay on any executor of
+                    # any fleet instance
+                    tok = int(sample(logits[row + piece.length - 1][None],
+                                     self.sampling,
+                                     step=req.num_tokens)[0])
+                    req.output_tokens.append(tok)
+                    req.note_token()
+                    req.state = RequestState.RUNNING
+                    self.last_token[req.batch_slot] = tok
+                    if req.done or req.num_tokens >= self.max_seq:
+                        self.scheduler.finish(req, self.block_log)
+                        req.finish_time = time.monotonic()
+                        finished.append(req)
+                row += piece.length
+            if plan.spec:
+                finished.extend(self._verify_spec(plan, logits, row))
+
+        finished.extend(pend.prefill_finished)
+
+        if pend.decode_logits is not None:
+            logits = np.asarray(pend.decode_logits)
+            t_done = time.perf_counter()
             # one batched sample over the whole decode batch (the
             # per-request loop serialized B host round trips per step)
             slots = np.fromiter((r.batch_slot for r in plan.decode),
@@ -356,6 +474,9 @@ class DPExecutor:
                     self.scheduler.finish(req, self.block_log)
                     req.finish_time = time.monotonic()
                     finished.append(req)
+        if t_done is not None:
+            self.perf["device_busy_s"] += t_done - pend.t_launch
+        self._dev_stale = True
         self.steps_done += 1
         return finished
 
@@ -416,25 +537,398 @@ class DPExecutor:
         self.block_log.begin_step()  # clears; committed counter advances
 
     def rollback_inflight(self) -> int:
-        """§3.3: undo all block ops of the in-flight (uncommitted) step —
-        host block tables from the op log, device pools by restoring the
-        step's captured write-set rows (or the legacy step-boundary
-        snapshot), so table and pool agree exactly on which rows are
-        live."""
+        """§3.3: undo every uncommitted step — host block tables from
+        the op log, device pools by restoring each frame's captured
+        write-set rows (or the legacy step-boundary snapshot), newest
+        frame first, so table and pool agree exactly on which rows are
+        live.  Under the overlap pipeline this is *total*: the in-flight
+        step's speculative token guesses and launch-time chunk
+        bookkeeping unwind first, then both stacked frames — recovery
+        then sees exactly the last committed state, and replay
+        regenerates the lost step's tokens bit-identically (they are
+        pure functions of seed/prefix/position)."""
+        if self._inflight is not None:
+            pend, self._inflight = self._inflight, None
+            self._unwind_overlay(pend)
+            self._unwind_det(pend)
+            self.scheduler.unwind_plan_stats(pend.plan)
+        n = 0
+        for _ in range(self.block_log.num_frames):
+            undo = self.block_log.take_pool_undo()
+            snap = self.block_log.take_pool_snapshot()
+            if self.cache is not None:
+                if undo is not None:
+                    self.cache = restore_pool_rows(
+                        self.cache, self.paged_axes, undo)
+                elif snap is not None:
+                    self.cache = snap
+            n += self.block_log.undo_newest(self.block_manager,
+                                            self.scheduler.block_tables)
+        # admissions from the aborted step(s) return to the waiting queue
+        self.scheduler.rollback_aborted()
+        self._plan = None
+        self._dev_stale = True
+        return n
+
+    def has_uncommitted(self) -> bool:
+        """Anything between this executor and its last step boundary —
+        logged block ops, an armed pool capture, a stacked plan-ahead
+        frame, or an undrained launch.  (The overlap pipeline can hold
+        speculative state with *zero* block ops — a pure-decode frame —
+        so ``len(block_log) > 0`` alone is not a safe export guard.)"""
+        return (self._inflight is not None
+                or len(self.block_log) > 0
+                or self.block_log.num_frames > 1
+                or self.block_log.has_pool_state())
+
+    # -- overlap pipeline (host/device overlap, async readback) -------------------
+    #
+    # Lifecycle per engine step k (one call to ``overlap_step``):
+    #   1. plan step k against the *predicted* post-(k-1) state (the
+    #      k-1 launch applied its guessed tokens as a speculative
+    #      overlay, so the scheduler simply plans at the right
+    #      positions), in a fresh undo frame stacked on k-1's;
+    #   2. launch step k: token inputs chain from the device-resident
+    #      next-token vector (never the host guesses), a jitted
+    #      epilogue samples k's tokens on-device, and only token-id
+    #      sized D2H copies join the readback ring;
+    #   3. drain step k-1: force its logits (one step late), re-derive
+    #      the authoritative outcome with the host sampler, and either
+    #      confirm (replace guessed values, commit the oldest frame) or
+    #      reconcile (roll back k's frame + overlay, commit k-1's true
+    #      outcome via the lockstep commit code, replan k).
+    # A plan stays valid whenever the *shape* of the outcome matched —
+    # per-event token counts, finishes, and the device-chain inputs the
+    # next step consumed — so guessed token values never force replans
+    # on their own.
+
+    def overlap_step(self, ctx, step_no: int) -> List[Request]:
+        prev = self._inflight
+        nxt = None
+        if self.scheduler.num_requests:
+            nxt = self._plan_and_launch(ctx, step_no,
+                                        stacked=prev is not None)
+            if nxt is not None and prev is not None:
+                self.overlap_stats["planned_ahead"] += 1
+        finished: List[Request] = []
+        if prev is not None:
+            finished, diverged = self._drain(prev, nxt)
+            if diverged:
+                self.overlap_stats["replans"] += 1
+                nxt = (self._plan_and_launch(ctx, step_no, stacked=False)
+                       if self.scheduler.num_requests else None)
+        self._inflight = nxt
+        self.overlap_stats["steps"] += 1
+        return finished
+
+    def flush(self, ctx) -> List[Request]:
+        """Drain the in-flight step without launching another (pipeline
+        tail / engine quiesce)."""
+        prev, self._inflight = self._inflight, None
+        if prev is None:
+            return []
+        finished, _ = self._drain(prev, None)
+        return finished
+
+    def _plan_and_launch(self, ctx, step_no: int, *,
+                         stacked: bool) -> Optional[_Pending]:
+        """Plan-ahead half: plan in a (possibly stacked) undo frame,
+        capture the write set, and dispatch.  Returns None when the
+        scheduler has nothing plannable (pool/budget pressure)."""
+        if stacked:
+            self.block_log.push_frame()
+        plan = self.scheduler.plan_step(self.block_log)
+        if plan.empty:
+            if stacked:
+                self.block_log.undo_newest(self.block_manager,
+                                           self.scheduler.block_tables)
+            return None
+        # the capture gathers post-(k-1) row values: it dispatches after
+        # k-1's compute in device program order, which is exactly what a
+        # rollback of step k alone must restore
+        bids, offs = self._write_manifest(plan)
+        self.block_log.record_pool_undo(capture_pool_rows(
+            self.cache, self.paged_axes, bids, offs))
+        self.cache = copy_block_prefixes(self.cache, self.paged_axes,
+                                         plan.cow_copies)
+        self._plan = plan
+        return self.begin_compute(ctx, step_no, predict=True)
+
+    def _dev_chain(self):
+        """Device-resident last-token vector (refreshed from the host
+        copy whenever the pipeline broke the chain)."""
+        if self._dev_last is None or self._dev_stale:
+            import jax.numpy as jnp
+            self._dev_last = jnp.asarray(self.last_token)
+            self._dev_stale = False
+        return self._dev_last
+
+    def _chain_chunk_tokens(self, tokens: np.ndarray, plan: StepPlan):
+        """Chunk-launch inputs with every speculative-window row 0 (the
+        re-forwarded last committed token — a host-side *guess* under
+        plan-ahead) overridden from the device chain."""
+        import jax.numpy as jnp
+        dev = jnp.asarray(tokens)
+        if not plan.spec:
+            return dev
+        row = sum(p.length for p in plan.chunks)
+        idx, slots = [], []
+        for win in plan.spec:
+            idx.append(row)
+            slots.append(win.req.batch_slot)
+            row += win.length
+        chain = self._dev_chain()
+        return dev.at[jnp.asarray(idx, jnp.int32)].set(
+            chain[jnp.asarray(slots, jnp.int32)])
+
+    def _launch_predict(self, pend: _Pending) -> None:
+        """Device-side sampling epilogue: enumerate the step's sampling
+        events, guess their outcomes for the overlay, sample their
+        tokens on-device (position-seeded uniforms computed host-side),
+        scatter the emitted last tokens into the device chain, and
+        enqueue the token-id D2H copies."""
+        plan = pend.plan
+        sched = self.scheduler
+        points: List[_Point] = []
+        row = 0
+        for piece in plan.chunks:
+            if piece.last:
+                points.append(_Point(piece.req, "chunk_last", "chunk",
+                                     row + piece.length - 1))
+            row += piece.length
+        for win in plan.spec:
+            points.append(_Point(win.req, "spec", "chunk", row, win=win))
+            row += win.length
+        for req in plan.decode:
+            points.append(_Point(req, "decode", "decode", req.batch_slot))
+
+        # guesses + sample positions (pre-overlay state = the state the
+        # in-flight inputs were built from)
+        for pt in points:
+            req = pt.req
+            base = req.num_tokens
+            if pt.kind == "spec":
+                drafts = [int(t) for t in pt.win.tokens[base:]]
+                bonus = sched.predict_next_token(req,
+                                                 context=pt.win.tokens)
+                pt.guesses = drafts + [bonus]
+            else:
+                pt.guesses = [sched.predict_next_token(req)]
+            pt.positions = list(range(base, base + len(pt.guesses)))
+        pend.points = points
+
+        G = max(sched.spec_window, 1)
+        S = self.max_batch
+
+        def run_section(section: str, logits):
+            sec = [pt for pt in points if pt.section == section]
+            if not sec or logits is None:
+                return None
+            row0 = np.zeros(S, np.int32)
+            lens = np.zeros(S, np.int32)
+            drafts = np.zeros((S, G), np.int32)
+            u = np.zeros((S, G), np.float32)
+            slots = np.full(S, S, np.int32)   # out of range -> dropped
+            for i, pt in enumerate(sec):
+                pt.sidx = i
+                row0[i] = pt.row
+                lens[i] = len(pt.positions)
+                slots[i] = pt.req.batch_slot
+                if pt.kind == "spec":
+                    dr = pt.guesses[:-1]      # the forwarded drafts
+                    drafts[i, 1:1 + len(dr)] = dr
+                if self.sampling.temperature > 0.0:
+                    u[i, :len(pt.positions)] = seeded_uniforms(
+                        self.sampling.seed,
+                        np.asarray(pt.positions, np.int64))
+            targets, accepted, new_last = device_predict(
+                logits, row0, lens, drafts, u, self._dev_chain(), slots,
+                temperature=self.sampling.temperature,
+                top_p=self.sampling.top_p)
+            self._dev_last = new_last
+            self._dev_stale = False
+            _host_async(targets, accepted)
+            return targets, accepted
+
+        pend.pred_chunk = run_section("chunk", pend.chunk_logits)
+        pend.pred_decode = run_section("decode", pend.decode_logits)
+        _host_async(pend.chunk_logits, pend.decode_logits)
+
+        # deterministic chunk bookkeeping applies at launch (correct for
+        # any sampled outcome; undone only with the whole frame)
+        for piece in plan.chunks:
+            req = piece.req
+            info = sched._seq.get(req.req_id)
+            pend.det.append(_Det(
+                req, piece, req.prefill_pos,
+                None if info is None else info.next_register,
+                True if info is None else info.counted))
+            req.prefill_pos = piece.start + piece.length
+            sched.note_chunk_done(piece, self.block_log)
+
+        # the speculative overlay: guessed tokens advance each request's
+        # host-visible position so the next plan sees post-step state
+        for pt in points:
+            pt.req.apply_speculative(pt.guesses)
+            pt.predicted_done = (pt.req.done
+                                 or pt.req.num_tokens >= self.max_seq)
+
+    def _unwind_overlay(self, pend: _Pending) -> None:
+        for pt in reversed(pend.points):
+            pt.req.unwind_speculative(len(pt.guesses))
+
+    def _unwind_det(self, pend: _Pending) -> None:
+        sched = self.scheduler
+        for d in reversed(pend.det):
+            d.req.prefill_pos = d.prev_prefill_pos
+            info = sched._seq.get(d.req.req_id)
+            if info is None:
+                continue
+            if d.prev_next_register is not None:
+                info.next_register = d.prev_next_register
+            if info.counted and not d.counted_was:
+                info.counted = False
+                sched.stats["prefill_tokens_cached"] -= info.cached_tokens
+
+    def _unwind_pending(self, pend: _Pending) -> None:
+        """Roll back a launched plan-ahead step completely: speculative
+        overlay, launch-time bookkeeping, pool rows (restoring the
+        post-(k-1) values its capture gathered), block ops, and any
+        admissions of its frame."""
+        self._unwind_overlay(pend)
+        self._unwind_det(pend)
+        self.scheduler.unwind_plan_stats(pend.plan)
         undo = self.block_log.take_pool_undo()
         snap = self.block_log.take_pool_snapshot()
         if self.cache is not None:
             if undo is not None:
-                self.cache = restore_pool_rows(self.cache, self.paged_axes,
-                                               undo)
+                self.cache = restore_pool_rows(self.cache,
+                                               self.paged_axes, undo)
             elif snap is not None:
                 self.cache = snap
-        n = self.block_log.undo_all(self.block_manager,
-                                    self.scheduler.block_tables)
-        # admissions from the aborted step return to the waiting queue
+        self.block_log.undo_newest(self.block_manager,
+                                   self.scheduler.block_tables)
         self.scheduler.rollback_aborted()
-        self._plan = None
-        return n
+
+    def _actual_outcome(self, pend: _Pending, ch: Optional[np.ndarray],
+                        de: Optional[np.ndarray]) -> List[_Actual]:
+        """The authoritative outcome of each sampling event, re-derived
+        from the drained logits with the host sampler — pure (no state
+        mutated), replicating the lockstep commit's emit/finish logic
+        against the *committed* (pre-overlay) positions."""
+        out: List[_Actual] = []
+        for pt in pend.points:
+            req = pt.req
+            committed = req.num_tokens - req.speculative_tokens
+            committed_out = len(req.output_tokens) - req.speculative_tokens
+            logits = ch if pt.section == "chunk" else de
+            if pt.kind == "spec":
+                g = pt.win.length
+                toks, accepted = spec_verify(
+                    logits[pt.row:pt.row + g], pt.win.tokens[committed:],
+                    self.sampling, start_step=committed)
+            else:
+                toks = sample(logits[pt.row][None], self.sampling,
+                              step=committed)
+                accepted = 0
+            tokens: List[int] = []
+            fin = False
+            n_out = committed_out
+            for t in toks:
+                t = int(t)
+                tokens.append(t)
+                n_out += 1
+                done = (n_out >= req.max_new_tokens
+                        or (req.eos_token is not None
+                            and t == req.eos_token))
+                fin = done or committed + len(tokens) >= self.max_seq
+                if fin:
+                    break
+            out.append(_Actual(tokens, accepted, fin))
+        return out
+
+    def _diverged(self, pend: _Pending, actual: List[_Actual]) -> bool:
+        """Did the in-flight step's real outcome invalidate the stacked
+        plan-ahead step?  Token *values* never do on their own — only
+        the outcome's shape: emitted counts (spec accepts), finishes,
+        and the device-chain tokens the next launch actually consumed
+        as inputs (greedy prediction is exact; temperature>0 can
+        diverge in the last ULP, costing a replan, never a token)."""
+        pred = {}
+        for arrs, sec in ((pend.pred_chunk, "chunk"),
+                          (pend.pred_decode, "decode")):
+            if arrs is not None:
+                pred[sec] = (np.asarray(arrs[0]), np.asarray(arrs[1]))
+        for pt, act in zip(pend.points, actual):
+            if len(act.tokens) != len(pt.guesses):
+                return True
+            if act.finished != pt.predicted_done:
+                return True
+            if not act.finished:
+                targets, accepted = pred[pt.section]
+                dev_tok = int(targets[pt.sidx, int(accepted[pt.sidx])])
+                if dev_tok != act.tokens[-1]:
+                    return True
+        return False
+
+    def _confirm(self, pend: _Pending,
+                 actual: List[_Actual]) -> List[Request]:
+        """Matched outcome: swap the authoritative token values in for
+        the guesses and run the commit-side bookkeeping, targeting the
+        *oldest* frame (this step's own — a stacked plan-ahead frame
+        may sit on top)."""
+        finished: List[Request] = []
+        oldest = self.block_log.oldest()
+        for pt, act in zip(pend.points, actual):
+            req = pt.req
+            req.confirm_speculative(act.tokens)
+            req.note_token()
+            self.last_token[req.batch_slot] = act.tokens[-1]
+            if pt.kind == "spec":
+                self.scheduler.note_spec_done(pt.win, len(act.tokens),
+                                              act.accepted)
+            if pt.kind in ("spec", "decode"):
+                self.scheduler.note_decode_progress(req, oldest)
+            if act.finished:
+                self.scheduler.finish(req, oldest)
+                req.finish_time = time.monotonic()
+                finished.append(req)
+        return finished
+
+    def _drain(self, prev: _Pending,
+               nxt: Optional[_Pending]) -> Tuple[List[Request], bool]:
+        """Retire the in-flight step one launch late.  Returns
+        ``(finished, diverged)``; on divergence the stacked plan-ahead
+        step ``nxt`` has been fully unwound (newest-first, so pool rows
+        restore in exact reverse temporal order) and the true outcome
+        committed via the lockstep commit path."""
+        self.overlap_stats["drains"] += 1
+        ch = de = None
+        if prev.chunk_logits is not None:
+            ch = np.asarray(prev.chunk_logits)
+            prev.chunk_logits = ch
+        if prev.decode_logits is not None:
+            de = np.asarray(prev.decode_logits)
+            prev.decode_logits = de
+        self.perf["device_busy_s"] += time.perf_counter() - prev.t_launch
+        actual = self._actual_outcome(prev, ch, de)
+        if not self._diverged(prev, actual):
+            finished = self._confirm(prev, actual)
+            self.block_log.commit_oldest()
+            self.steps_done += 1
+            return finished, False
+        # reconcile: unwind the mispredicted plan-ahead step first (its
+        # pool capture holds post-prev values, so it must restore before
+        # prev's own spec-reject restores), then pop prev's guesses and
+        # replay its true outcome through the lockstep commit code
+        if nxt is not None:
+            self._unwind_pending(nxt)
+        self._unwind_overlay(prev)
+        prev.t_launch = time.perf_counter()   # busy already accounted
+        finished = self.finish_compute(prev, chunk_book=False)
+        self.block_log.commit_oldest()
+        self._dev_stale = True
+        return finished, True
 
     # -- KV-block migration (§3.2, streaming path) --------------------------------
 
@@ -517,4 +1011,5 @@ class DPExecutor:
             self.cache, self.paged_axes, kv.pool_blocks, kv.state,
             np.asarray(live_ids, np.int32), req.batch_slot)
         self.last_token[req.batch_slot] = kv.last_token
+        self._dev_stale = True   # device token chain must re-sync
         return True

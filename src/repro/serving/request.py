@@ -42,6 +42,40 @@ class Request:
     # A RUNNING request only joins the decode batch once prefill_pos
     # reaches its admission-time prefill target.
     prefill_pos: int = 0
+    # overlap pipeline: the last `speculative_tokens` entries of
+    # `output_tokens` are plan-ahead *guesses* for a step still in
+    # flight on device.  They exist so the next step can be planned at
+    # the predicted positions; the values are replaced by the
+    # authoritative host-sampled tokens when the step drains (or popped
+    # wholesale on reconcile/rollback).  Consumers that must only see
+    # committed tokens (streaming, migration export) read
+    # ``committed_output``.
+    speculative_tokens: int = 0
+
+    @property
+    def committed_output(self) -> List[int]:
+        """Output tokens confirmed by a drained step (never speculative)."""
+        if self.speculative_tokens:
+            return self.output_tokens[:len(self.output_tokens)
+                                      - self.speculative_tokens]
+        return self.output_tokens
+
+    def apply_speculative(self, tokens: List[int]) -> None:
+        self.output_tokens.extend(int(t) for t in tokens)
+        self.speculative_tokens += len(tokens)
+
+    def confirm_speculative(self, tokens: List[int]) -> None:
+        """Replace this request's oldest in-flight guesses with the
+        authoritative sampled values (counts already verified equal)."""
+        n = len(tokens)
+        base = len(self.output_tokens) - self.speculative_tokens
+        self.output_tokens[base:base + n] = [int(t) for t in tokens]
+        self.speculative_tokens -= n
+
+    def unwind_speculative(self, n: int) -> None:
+        if n:
+            del self.output_tokens[len(self.output_tokens) - n:]
+            self.speculative_tokens -= n
 
     @property
     def tokens_so_far(self) -> List[int]:

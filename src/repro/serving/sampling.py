@@ -13,6 +13,130 @@ class SamplingParams:
     seed: int = 0
 
 
+# ---------------------------------------------------------------------------
+# Batched seeded uniforms.
+#
+# The sampler draws one uniform per row from
+# ``np.random.default_rng(seed).random()`` where ``seed`` encodes the row's
+# sequence position.  Constructing a Generator per row per step is the
+# engine's host-side hot spot, so ``_seeded_uniforms`` replicates numpy's
+# SeedSequence pool mixing + PCG64 seeding + first draw exactly — same bits
+# out — as a handful of vectorized uint32/uint64 passes over all rows at
+# once.  The hash-constant chains below are data-independent, so they are
+# precomputed once at import (as Python ints, then narrowed to uint32).
+# ---------------------------------------------------------------------------
+
+_XSHIFT = np.uint32(16)
+_MIX_L = np.uint32(0xCA01F9DD)           # SeedSequence MIX_MULT_L
+_MIX_R = np.uint32(0x4973F715)           # SeedSequence MIX_MULT_R
+_U32MASK = np.uint64(0xFFFFFFFF)
+_PCG_MULT_HI = np.uint64(2549297995355413924)   # PCG64 128-bit multiplier
+_PCG_MULT_LO = np.uint64(4865540595714422341)
+
+
+def _hash_consts(init: int, mult: int, n: int):
+    """(xor, mul) uint32 pairs for n chained SeedSequence hashmix calls."""
+    out, hc = [], init
+    for _ in range(n):
+        nxt = (hc * mult) & 0xFFFFFFFF
+        out.append((np.uint32(hc), np.uint32(nxt)))
+        hc = nxt
+    return out
+
+
+# pool fill (4 calls) + pool mixing (12 calls) share one INIT_A chain;
+# generate_state uses its own INIT_B chain (8 output words).
+_HASH_A = _hash_consts(0x43B0D7E5, 0x931E8875, 16)
+_HASH_B = _hash_consts(0x8B51F9DD, 0x58F38DED, 8)
+
+
+def _seeded_uniforms(seeds: np.ndarray) -> np.ndarray:
+    """One ``np.random.default_rng(int(s)).random()`` per entry, batched.
+
+    Bit-identical to the per-row Generator construction for any seed that
+    fits in uint64 (callers guard the range and fall back otherwise).
+    """
+    seeds = np.asarray(seeds, dtype=np.uint64)
+    # -- SeedSequence: fill + mix the 4-word entropy pool.  Entropy is the
+    # seed as [lo32, hi32]; absent words hash like explicit zeros, so every
+    # seed < 2**64 takes this one code path.
+    consts = iter(_HASH_A)
+
+    def hashmix(v):
+        xor_c, mul_c = next(consts)
+        v = (v ^ xor_c) * mul_c
+        return v ^ (v >> _XSHIFT)
+
+    zero = np.zeros(seeds.shape, np.uint32)
+    pool = [hashmix((seeds & _U32MASK).astype(np.uint32)),
+            hashmix((seeds >> np.uint64(32)).astype(np.uint32)),
+            hashmix(zero), hashmix(zero)]
+    for i_src in range(4):
+        for i_dst in range(4):
+            if i_src == i_dst:
+                continue
+            r = pool[i_dst] * _MIX_L - hashmix(pool[i_src]) * _MIX_R
+            pool[i_dst] = r ^ (r >> _XSHIFT)
+    # -- SeedSequence.generate_state(4, uint64): 8 uint32 words, paired
+    # little-endian into (initstate, initseq) 64-bit halves.
+    w = []
+    for i, (xor_c, mul_c) in enumerate(_HASH_B):
+        v = (pool[i % 4] ^ xor_c) * mul_c
+        w.append((v ^ (v >> _XSHIFT)).astype(np.uint64))
+    sh = np.uint64(32)
+    st_hi, st_lo = w[0] | (w[1] << sh), w[2] | (w[3] << sh)
+    iq_hi, iq_lo = w[4] | (w[5] << sh), w[6] | (w[7] << sh)
+    inc_hi = (iq_hi << np.uint64(1)) | (iq_lo >> np.uint64(63))
+    inc_lo = (iq_lo << np.uint64(1)) | np.uint64(1)
+
+    def mul_hilo(a, b):
+        # full 64x64 -> 128-bit product via 32-bit limbs
+        al, ah = a & _U32MASK, a >> sh
+        bl, bh = b & _U32MASK, b >> sh
+        ll, lh, hl, hh = al * bl, al * bh, ah * bl, ah * bh
+        mid = (ll >> sh) + (lh & _U32MASK) + (hl & _U32MASK)
+        lo = (ll & _U32MASK) | ((mid & _U32MASK) << sh)
+        return hh + (lh >> sh) + (hl >> sh) + (mid >> sh), lo
+
+    def pcg_step(hi, lo):
+        # state = state * MULT + inc  (mod 2**128)
+        phi, plo = mul_hilo(lo, _PCG_MULT_LO)
+        phi = phi + lo * _PCG_MULT_HI + hi * _PCG_MULT_LO
+        lo2 = plo + inc_lo
+        return phi + inc_hi + (lo2 < plo).astype(np.uint64), lo2
+
+    hi = np.zeros(seeds.shape, np.uint64)
+    lo = np.zeros(seeds.shape, np.uint64)
+    hi, lo = pcg_step(hi, lo)                 # srandom: advance zero state
+    lo2 = lo + st_lo
+    hi, lo = hi + st_hi + (lo2 < lo).astype(np.uint64), lo2
+    hi, lo = pcg_step(hi, lo)                 # srandom: second advance
+    hi, lo = pcg_step(hi, lo)                 # the single .random() draw
+    out = hi ^ lo                             # PCG64 XSL-RR output
+    rot = hi >> np.uint64(58)
+    out = (out >> rot) | (out << ((np.uint64(64) - rot) & np.uint64(63)))
+    return (out >> np.uint64(11)) * (1.0 / 9007199254740992.0)
+
+
+def seeded_uniforms(seed: int, steps: np.ndarray) -> np.ndarray:
+    """Per-row uniforms for ``sample``: rng(seed*1_000_003 + step).random().
+
+    Vectorized over rows when every derived seed fits in uint64; falls back
+    to the reference per-row Generator path for exotic seeds.
+    """
+    steps = np.asarray(steps, np.int64)
+    if steps.size == 0:
+        return np.empty(0, np.float64)
+    base = seed * 1_000_003
+    lo_v, hi_v = base + int(steps.min()), base + int(steps.max())
+    if 0 <= lo_v and hi_v < 2 ** 64:
+        # wraparound addition is exact here: the true values are in range
+        return _seeded_uniforms(np.uint64(base & 0xFFFFFFFFFFFFFFFF)
+                                + steps.astype(np.uint64))
+    return np.asarray([np.random.default_rng(base + int(s)).random()
+                       for s in steps])
+
+
 def sample(logits: np.ndarray, params: SamplingParams,
            step=0) -> np.ndarray:
     """logits: (B, V) -> (B,) int32 token ids.
@@ -33,8 +157,7 @@ def sample(logits: np.ndarray, params: SamplingParams,
     if params.temperature <= 0.0:
         return np.argmax(logits, axis=-1).astype(np.int32)
     steps = np.broadcast_to(np.asarray(step, np.int64), (logits.shape[0],))
-    u = np.asarray([np.random.default_rng(
-        params.seed * 1_000_003 + int(s)).random() for s in steps])
+    u = seeded_uniforms(params.seed, steps)
     z = logits / params.temperature
     z = z - z.max(axis=-1, keepdims=True)
     p = np.exp(z)
@@ -51,6 +174,90 @@ def sample(logits: np.ndarray, params: SamplingParams,
     idx = np.minimum((cdf < u[:, None]).sum(axis=-1), logits.shape[-1] - 1)
     return np.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
         np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Device-side predictive sampling (overlap pipeline's async readback).
+#
+# The overlapped executor never materializes full logits on the host
+# mid-pipeline: a tiny jitted epilogue samples every window's tokens
+# on-device with the same math as `sample` (greedy argmax / seeded
+# top-p inverse-CDF — the per-position uniforms are computed on host by
+# `seeded_uniforms` and passed in), chains the chosen last tokens into a
+# device-resident next-token vector, and only token-id-sized arrays ride
+# the device→host readback ring.  Greedy prediction is exact (argmax
+# order survives the f32↔f64 cast, both sides take the first index);
+# temperature>0 may rarely differ in the last ULP of the CDF — the host
+# sampler re-derives every token from the drained logits at commit time
+# and remains authoritative, so a disagreement costs a replan, never a
+# wrong token.
+# ---------------------------------------------------------------------------
+
+_DEVICE_PREDICT_CACHE: dict = {}
+
+
+def device_predict(logits, row0, lens, drafts, u, dev_last, slots, *,
+                   temperature: float, top_p: float):
+    """Sample all windows of one compiled step's logits on-device.
+
+    logits: (R, V) device array.  Per window i (of S, padded):
+    ``row0[i]`` first logits row, ``lens[i]`` rows used (0 = padding),
+    ``drafts[i]`` the g tokens forwarded (row 0's entry unused),
+    ``u[i]`` per-row uniforms, ``slots[i]`` decode batch slot (out of
+    range = dropped).  Returns ``(targets (S,G), accepted (S,),
+    new_dev_last)`` — targets row-wise sampled tokens, accepted the
+    number of drafts matched, and ``dev_last`` updated with each
+    window's emitted last token."""
+    key = (round(float(temperature), 9), round(float(top_p), 9))
+    fn = _DEVICE_PREDICT_CACHE.get(key)
+    if fn is None:
+        fn = _build_device_predict(*key)
+        _DEVICE_PREDICT_CACHE[key] = fn
+    return fn(logits, row0, lens, drafts, u, dev_last, slots)
+
+
+def _build_device_predict(temperature: float, top_p: float):
+    import jax
+    import jax.numpy as jnp
+
+    def predict(logits, row0, lens, drafts, u, dev_last, slots):
+        G = drafts.shape[1]
+        idx = jnp.clip(row0[:, None] + jnp.arange(G, dtype=row0.dtype),
+                       0, logits.shape[0] - 1)
+        rows = logits[idx].astype(jnp.float32)          # (S, G, V)
+        if temperature <= 0.0:
+            targets = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+        else:
+            z = rows / temperature
+            z = z - z.max(axis=-1, keepdims=True)
+            p = jnp.exp(z)
+            p = p / p.sum(axis=-1, keepdims=True)
+            order = jnp.argsort(-p, axis=-1)
+            sp = jnp.take_along_axis(p, order, axis=-1)
+            if top_p < 1.0:
+                csum = jnp.cumsum(sp, axis=-1)
+                sp = jnp.where(csum - sp > top_p, 0.0, sp)
+                sp = sp / sp.sum(axis=-1, keepdims=True)
+            cdf = jnp.cumsum(sp, axis=-1)
+            k = jnp.minimum((cdf < u[..., None]).sum(axis=-1),
+                            rows.shape[-1] - 1)
+            targets = jnp.take_along_axis(
+                order, k[..., None], axis=-1)[..., 0].astype(jnp.int32)
+        if G > 1:
+            ok = (targets[:, :-1] == drafts[:, 1:])
+            live = jnp.arange(1, G)[None, :] < lens[:, None]
+            accepted = jnp.cumprod(
+                (ok & live).astype(jnp.int32), axis=1).sum(axis=1)
+        else:
+            accepted = jnp.zeros(row0.shape, jnp.int32)
+        accepted = jnp.minimum(accepted, jnp.maximum(lens - 1, 0))
+        last = jnp.take_along_axis(
+            targets, accepted[:, None].astype(jnp.int32), axis=1)[:, 0]
+        safe = jnp.where(lens > 0, slots, dev_last.shape[0])
+        new_last = dev_last.at[safe].set(last, mode="drop")
+        return targets, accepted, new_last
+
+    return jax.jit(predict)
 
 
 def spec_verify(logits: np.ndarray, drafts, params: SamplingParams, *,

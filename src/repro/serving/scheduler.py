@@ -383,6 +383,37 @@ class LocalScheduler:
         self.spec_hist[g] = self.spec_hist.get(g, 0) + 1
         return g
 
+    # -- plan-ahead (overlap pipeline) --------------------------------------------
+
+    def predict_next_token(self, req: Request, context=None) -> int:
+        """Value guess for the token an in-flight device step will emit
+        for ``req``, so the *next* step can be planned before this one
+        drains.  Uses the n-gram proposer (free, and right exactly where
+        drafts are right); falls back to repeating the last token.  The
+        guess only shapes plan quality — drafts proposed from it, the
+        planner's done-check — never the emitted stream: the host
+        sampler re-derives every token from the drained logits and is
+        authoritative.  It is sanitized away from EOS so plan-ahead
+        never skips a request on a guessed finish."""
+        toks = list(context) if context is not None else req.tokens_so_far
+        prop = ngram_propose(toks, 1)
+        guess = int(prop[0]) if prop else (int(toks[-1]) if toks else 0)
+        if req.eos_token is not None and guess == int(req.eos_token):
+            guess = 0 if guess != 0 else 1
+        return guess
+
+    def unwind_plan_stats(self, plan: "StepPlan") -> None:
+        """Reconcile path: a plan-ahead step was rolled back before it
+        committed — back out the advisory counters its plan/launch
+        bumped so the relaunched step doesn't double-count."""
+        for piece in plan.chunks:
+            self.stats["prefill_tokens_computed"] -= piece.length
+            self.stats["prefill_chunks"] -= 1
+        for win in plan.spec:
+            self.stats["spec_windows"] -= 1
+            self.stats["spec_drafts"] -= win.length - 1
+            self.spec_hist[win.length] -= 1
+
     # -- admission internals -----------------------------------------------------
 
     def _ensure_coverage(self, req: Request, take: int,
@@ -611,10 +642,15 @@ class LocalScheduler:
         if info is None:
             return
         bs = self.block_manager.block_size
-        kv_complete = req.num_tokens - 1
+        # overlap pipeline: only *committed* tokens are registrable —
+        # the speculative tail holds plan-ahead guesses whose values
+        # (and KV rows) are still in flight
+        committed = req.num_tokens - req.speculative_tokens
+        kv_complete = committed - 1
         full = kv_complete // bs
         if len(info.digests) < full:
-            toks = tuple(req.tokens_so_far)
+            toks = tuple((req.prompt_tokens + req.committed_output)
+                         if req.speculative_tokens else req.tokens_so_far)
             info.tokens = toks   # registration reads block token slices
             while len(info.digests) < full:
                 b = len(info.digests)

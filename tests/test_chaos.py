@@ -456,3 +456,56 @@ def test_trace_traffic_still_routes_by_model(shared_workdir):
     fleet.run(max_ticks=200)
     assert fleet.unfinished == 0
     assert len(fleet.requests) == 2
+
+
+# -- seeded per-event recovery-cost dispersion -------------------------------------
+
+
+def test_event_cost_jitter_zero_is_exact_base():
+    """Default profiles (jitter=0) must reproduce the historical
+    constant costs bit-exactly — the campaign CI determinism gate
+    compares forensics produced before and after this knob existed."""
+    p = VirtualCostProfile()
+    for kind in ("revive", "restart", "spare"):
+        for idx in range(4):
+            assert p.event_cost(kind, idx, 0.123456) == 0.123456
+
+
+def test_event_cost_jitter_deterministic_and_dispersed():
+    p = VirtualCostProfile(jitter=0.4, jitter_seed=7)
+    q = VirtualCostProfile(jitter=0.4, jitter_seed=7)
+    base = 0.75
+    costs = [p.event_cost("revive", i, base) for i in range(16)]
+    # pure function of (seed, kind, index): a re-run reproduces each
+    # event's cost exactly, which keeps campaign forensics byte-stable
+    assert costs == [q.event_cost("revive", i, base) for i in range(16)]
+    assert all(c > 0.0 for c in costs)              # lognormal support
+    assert len(set(costs)) > 1                      # actually dispersed
+    assert all(c == round(c, 6) for c in costs)     # forensics-ready
+    # kinds draw from independent streams at the same index
+    assert p.event_cost("restart", 0, base) != costs[0]
+    # a different seed is a different campaign
+    r = VirtualCostProfile(jitter=0.4, jitter_seed=8)
+    assert r.event_cost("revive", 0, base) != costs[0]
+
+
+def test_event_cost_jitter_flows_through_router_charges(shared_workdir):
+    """Two identical fleets with a jittered profile charge identical
+    per-event costs (forensics byte-stable), and the charged sequence
+    differs from the constant-cost profile's."""
+    def burn(prof):
+        fleet = build_fleet(fleet_cfg(), fleet_ecfg(shared_workdir),
+                            instances=2, cost_profile=prof)
+        for _ in range(2):
+            fleet.submit(list(PROMPT), 4)
+            fleet.tick()
+        fleet.lose_instance(0, reason="jitter drill")
+        fleet.run(max_ticks=60)
+        return [(e["policy"], e["charged_s"]) for e in fleet.forensics]
+
+    jit = VirtualCostProfile(jitter=0.5, jitter_seed=3)
+    a, b = burn(jit), burn(jit)
+    assert a and a == b
+    flat = burn(VirtualCostProfile())
+    assert [p for p, _ in flat] == [p for p, _ in a]   # same decisions
+    assert [c for _, c in flat] != [c for _, c in a]   # jittered costs
